@@ -1,0 +1,60 @@
+"""E3 / paper Figs. 4-5 — batch completion time + abort ratio under
+failures.  The headline experiment:
+
+  Fig. 4:  NPB-DT 85, 16 faulty nodes @ p_f=2%   (paper: TOFA -31%,
+           abort 7.4% -> 2%)
+  Fig. 5a: LAMMPS 64,  8 faulty nodes @ p_f=2%   (paper: TOFA -17.5%,
+           abort -> 0 for TOFA)
+  Fig. 5b: LAMMPS 64, 16 faulty nodes @ p_f=2%   (paper: TOFA -18.9%,
+           abort 4.0% -> 1.1%)
+
+10 batches x 100 instances each, paired N_f per batch, 8x8x8 torus with the
+paper's platform constants.  Use --fast (or FAST=1) for a 3x30 smoke run.
+"""
+from __future__ import annotations
+
+import os
+
+from repro.sim.batchsim import run_scenario
+from repro.workloads.patterns import lammps_like, npb_dt_like
+
+PAPER = {
+    "fig4_npb_dt_16f": (0.31, 0.074, 0.02),
+    "fig5a_lammps_8f": (0.175, None, 0.0),
+    "fig5b_lammps_16f": (0.189, 0.04, 0.011),
+}
+
+
+def run(csv=print, fast: bool | None = None) -> dict:
+    if fast is None:
+        fast = bool(int(os.environ.get("FAST", "0")))
+    nb, ni = (3, 30) if fast else (10, 100)
+    scenarios = [
+        ("fig4_npb_dt_16f", lambda: npb_dt_like(85), 16),
+        ("fig5a_lammps_8f", lambda: lammps_like(64), 8),
+        ("fig5b_lammps_16f", lambda: lammps_like(64), 16),
+    ]
+    out = {}
+    for name, wl_fn, n_faulty in scenarios:
+        res = run_scenario(wl_fn, ("linear", "tofa"), dims=(8, 8, 8),
+                           n_batches=nb, n_instances=ni,
+                           n_faulty=n_faulty, p_f=0.02, seed=0)
+        lin, tofa = res["linear"], res["tofa"]
+        imp = tofa.improvement_over(lin)
+        ref_imp, ref_ab_lin, ref_ab_tofa = PAPER[name]
+        csv(f"{name},batch_completion_linear,"
+            f"{lin.mean_completion:.2f},s")
+        csv(f"{name},batch_completion_tofa,{tofa.mean_completion:.2f},s")
+        csv(f"{name},improvement,{imp:.3f},frac  # paper: {ref_imp}")
+        csv(f"{name},abort_ratio_linear,{lin.mean_abort_ratio:.3f},frac"
+            f"  # paper: {ref_ab_lin}")
+        csv(f"{name},abort_ratio_tofa,{tofa.mean_abort_ratio:.3f},frac"
+            f"  # paper: {ref_ab_tofa}")
+        out[name] = {"improvement": imp,
+                     "abort_linear": lin.mean_abort_ratio,
+                     "abort_tofa": tofa.mean_abort_ratio}
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,94 @@
+"""Render the EXPERIMENTS.md roofline + perf tables from the dry-run JSONL.
+
+    PYTHONPATH=src python -m benchmarks.make_tables [--root .]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+
+def load(path):
+    rows = []
+    if os.path.exists(path):
+        for line in open(path):
+            r = json.loads(line)
+            if r.get("ok"):
+                rows.append(r)
+    return rows
+
+
+def fmt_ms(s):
+    return f"{s*1e3:.1f}"
+
+
+def roofline_table(rows, mesh="16x16") -> str:
+    hdr = ("| arch | shape | compute ms | memory ms | mem(kernel) ms | "
+           "collective ms | dominant | useful | roofline | GB/dev | fits | "
+           "TOFA hop win |")
+    sep = "|" + "---|" * 12
+    out = [hdr, sep]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        if r["mesh"] != mesh:
+            continue
+        plc = r.get("placement", {})
+        win = ""
+        if "linear" in plc and "tofa" in plc and plc["linear"]["hop_bytes"]:
+            w = 1 - plc["tofa"]["hop_bytes"] / plc["linear"]["hop_bytes"]
+            win = f"{w:+.1%}"
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_ms(r['compute_s'])} | "
+            f"{fmt_ms(r['memory_s'])} | "
+            f"{fmt_ms(r.get('memory_s_kernel', r['memory_s']))} | "
+            f"{fmt_ms(r['collective_s'])} | {r['dominant']} | "
+            f"{r['useful_ratio']:.2f} | {r['roofline_fraction']:.1%} | "
+            f"{r['total_bytes_per_dev']/1e9:.1f} | "
+            f"{'y' if r['fits_hbm'] else 'n'} | {win} |")
+    return "\n".join(out)
+
+
+def perf_rows(base_rows, perf_rows_, arch, shape, mesh="16x16"):
+    sel = [r for r in base_rows
+           if r["arch"] == arch and r["shape"] == shape and r["mesh"] == mesh]
+    out = [("baseline", sel[0])] if sel else []
+    for r in perf_rows_:
+        if r["arch"] == arch and r["shape"] == shape and r["mesh"] == mesh:
+            out.append((r.get("tag", "variant"), r))
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--root", default=".")
+    args = ap.parse_args()
+    base = load(os.path.join(args.root, "experiments_dryrun_final.jsonl"))
+    perf = load(os.path.join(args.root, "experiments_perf.jsonl"))
+    print("### single-pod 16x16\n")
+    print(roofline_table(base, "16x16"))
+    print("\n### multi-pod 2x16x16\n")
+    print(roofline_table(base, "2x16x16"))
+    print("\n### perf variants\n")
+    for arch, shape in (("minicpm3-4b", "train_4k"),
+                        ("llama-3.2-vision-11b", "decode_32k"),
+                        ("phi3.5-moe-42b", "train_4k"),
+                        ("nemotron-4-340b", "train_4k")):
+        for tag, r in perf_rows(base, perf, arch, shape,
+                                mesh="16x16" if arch != "nemotron-4-340b"
+                                else "2x16x16"):
+            bound = max(r["compute_s"],
+                        r.get("memory_s_kernel", r["memory_s"]),
+                        r["collective_s"])
+            print(f"{arch} x {shape} [{tag}]: "
+                  f"compute={fmt_ms(r['compute_s'])}ms "
+                  f"mem={fmt_ms(r['memory_s'])}ms "
+                  f"mem_kernel={fmt_ms(r.get('memory_s_kernel', 0))}ms "
+                  f"coll={fmt_ms(r['collective_s'])}ms "
+                  f"GB/dev={r['total_bytes_per_dev']/1e9:.1f} "
+                  f"fits={r['fits_hbm']} "
+                  f"bound(kernel-adj)={fmt_ms(bound)}ms "
+                  f"roofline_adj={(r['model_flops']/197e12)/bound:.1%}")
+
+
+if __name__ == "__main__":
+    main()

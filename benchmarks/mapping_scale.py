@@ -1,0 +1,44 @@
+"""E4 (beyond paper) — mapper cost/quality scaling.
+
+Hop-bytes quality and wall-clock of the Scotch-analogue mapper vs greedy /
+random / linear across process counts and torus sizes — establishes that
+TOFA placement overhead stays negligible against job runtimes.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.mapping import hop_bytes
+from repro.core.topology import TorusTopology
+from repro.core.tofa import place
+from repro.workloads.patterns import npb_dt_like
+
+
+def run(csv=print) -> dict:
+    out = {}
+    for dims, n in [((4, 4, 4), 48), ((8, 8, 8), 85), ((8, 8, 8), 256),
+                    ((16, 16), 192), ((8, 8, 8), 410)]:
+        topo = TorusTopology(dims)
+        D = topo.hop_matrix()
+        wl = npb_dt_like(n, seed=3)
+        name = "x".join(map(str, dims))
+        row = {}
+        for pol in ("linear", "random", "greedy", "topo"):
+            t0 = time.time()
+            res = place(pol, wl.comm, topo, rng=np.random.default_rng(0))
+            dt = time.time() - t0
+            hb = hop_bytes(wl.comm.G_v, D, res.placement)
+            row[pol] = (hb, dt)
+            csv(f"mapping_scale,{name}_n{n},{pol},{dt*1e3:.1f},"
+                f"ms_place_time,hop_bytes={hb:.3e}")
+        out[f"{name}_n{n}"] = row
+        rel = row["topo"][0] / row["linear"][0]
+        csv(f"mapping_scale,{name}_n{n},topo_vs_linear_hopbytes,"
+            f"{rel:.3f},ratio")
+    return out
+
+
+if __name__ == "__main__":
+    run()

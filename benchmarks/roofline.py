@@ -1,0 +1,60 @@
+"""E5 — roofline table from the dry-run sweep.
+
+Reads the JSONL written by ``python -m repro.launch.dryrun --all --out
+experiments_dryrun.jsonl`` (+ the retry file) and prints the §Roofline
+table: per (arch x shape x mesh) the three terms, the dominant one, the
+MODEL_FLOPS/HLO_FLOPs ratio, and the TOFA-vs-linear placement win on the
+hop-weighted collective term.  Does NOT recompile (the sweep takes ~40 min;
+run it via the launcher, not the benchmark harness).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+FILES = ("experiments_dryrun.jsonl", "experiments_dryrun2.jsonl",
+         "experiments_dryrun_perf.jsonl")
+
+
+def load_rows(root: str = ".") -> list[dict]:
+    rows: dict = {}
+    for f in FILES:
+        path = os.path.join(root, f)
+        if not os.path.exists(path):
+            continue
+        for line in open(path):
+            r = json.loads(line)
+            if r.get("ok"):
+                # later files override earlier baselines for the same cell
+                rows[(r["arch"], r["shape"], r["mesh"],
+                      r.get("moe_impl", ""))] = r
+    return list(rows.values())
+
+
+def run(csv=print, root: str = ".") -> dict:
+    rows = load_rows(root)
+    if not rows:
+        csv("roofline,NO_DATA,run_dryrun_first,0,see_docstring")
+        return {}
+    out = {}
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        key = f"{r['arch']}|{r['shape']}|{r['mesh']}"
+        plc = r.get("placement", {})
+        tofa_win = ""
+        if "linear" in plc and "tofa" in plc and plc["linear"]["hop_bytes"]:
+            win = 1 - plc["tofa"]["hop_bytes"] / plc["linear"]["hop_bytes"]
+            tofa_win = f",tofa_hop_win={win:.2%}"
+        csv(f"roofline,{key},{r['dominant']},"
+            f"{max(r['compute_s'], r['memory_s'], r['collective_s'])*1e3:.1f},"
+            f"ms_bound,compute={r['compute_s']*1e3:.1f}ms,"
+            f"memory={r['memory_s']*1e3:.1f}ms,"
+            f"collective={r['collective_s']*1e3:.1f}ms,"
+            f"useful={r['useful_ratio']:.3f},"
+            f"roofline_frac={r['roofline_fraction']:.2%},"
+            f"fits_hbm={r['fits_hbm']}{tofa_win}")
+        out[key] = r
+    return out
+
+
+if __name__ == "__main__":
+    run()

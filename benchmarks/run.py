@@ -1,0 +1,48 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig3,fig4_5] [--fast]
+
+Prints ``name,metric,value,unit[,extras]`` CSV lines.  The roofline table
+reads the dry-run JSONL (see benchmarks/roofline.py docstring) — run
+``python -m repro.launch.dryrun --all`` first for fresh numbers.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+BENCHES = ("fig3", "table1", "fig4_5", "mapping_scale", "fault_ablation",
+           "roofline")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: " + ",".join(BENCHES))
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller batches for smoke runs")
+    args, _ = ap.parse_known_args()
+    if args.fast:
+        os.environ["FAST"] = "1"
+    names = args.only.split(",") if args.only else list(BENCHES)
+
+    print("bench,metric,value,unit_or_notes")
+    rc = 0
+    for name in names:
+        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+        t0 = time.time()
+        try:
+            mod.run(csv=lambda line: print(line, flush=True))
+            print(f"{name},wall_time,{time.time()-t0:.1f},s")
+        except Exception as e:  # pragma: no cover
+            rc = 1
+            print(f"{name},ERROR,{e},exception", file=sys.stderr)
+            import traceback
+            traceback.print_exc()
+    return rc
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

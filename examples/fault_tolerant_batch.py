@@ -1,0 +1,65 @@
+"""Fault-tolerant batch scheduling — the paper's Fig. 4/5 experiment, live.
+
+Runs a 512-node 8x8x8 cluster simulation: heartbeats infer node health,
+the scheduler places batches of MPI-style jobs with default-slurm vs TOFA,
+failures abort jobs, and the elastic path re-places a running job when its
+node dies.
+
+    PYTHONPATH=src python examples/fault_tolerant_batch.py
+"""
+import numpy as np
+
+from repro.cluster.failures import BernoulliPerJob
+from repro.cluster.heartbeat import EWMA, HeartbeatMonitor
+from repro.cluster.scheduler import Job, Scheduler
+from repro.core.topology import TorusTopology
+from repro.sim.batchsim import run_batch
+from repro.sim.network import TorusNetwork
+from repro.workloads.patterns import lammps_like, npb_dt_like
+
+
+def main():
+    topo = TorusTopology((8, 8, 8))
+    net = TorusNetwork(topo)
+    rng = np.random.default_rng(0)
+    candidates = rng.choice(512, 16, replace=False)
+    fm = BernoulliPerJob(candidates, p_f=0.02)
+    truth = fm.outage_vector(512)
+
+    # 1) heartbeat monitoring converges on the flaky nodes
+    mon = HeartbeatMonitor(512, EWMA(alpha=0.05))
+    mon.simulate_rounds(np.random.default_rng(1), truth, 400)
+    est = mon.outage_probabilities()
+    found = set(np.flatnonzero(est > 0.005)) & set(candidates.tolist())
+    print(f"heartbeats flagged {len(found)}/16 flaky nodes "
+          f"(max est p_f={est.max():.3f})")
+
+    # 2) batches of 100 jobs, default-slurm vs TOFA (paper Fig. 4/5)
+    for wl_name, wl in (("NPB-DT-85", npb_dt_like(85)),
+                        ("LAMMPS-64", lammps_like(64))):
+        rows = {}
+        for pol in ("linear", "tofa"):
+            r = run_batch(wl, pol, net, fm, est, n_instances=100,
+                          rng=np.random.default_rng(2))
+            rows[pol] = r
+            print(f"  {wl_name:10s} {pol:6s} batch={r.completion_time:7.2f}s"
+                  f" abort_ratio={r.abort_ratio:5.1%}"
+                  f" run={r.success_runtime:.3f}s")
+        imp = 1 - rows["tofa"].completion_time / rows["linear"].completion_time
+        print(f"  {wl_name:10s} TOFA improvement: {imp:.1%}"
+              f"  (paper: 31% DT / 18.9% LAMMPS)\n")
+
+    # 3) elastic re-placement: a node dies under a running job
+    sch = Scheduler(topo, net=net)
+    sch.heartbeat_round(np.ones(512, dtype=bool))
+    rec = sch.submit(Job(lammps_like(64), distribution="tofa"))
+    victim = int(rec.placement.placement[10])
+    print(f"job {rec.job.job_id} running on 64 nodes; node {victim} dies...")
+    replaced = sch.handle_node_failure([victim])
+    print(f"re-placed {len(replaced)} job(s); restarts={rec.restarts}; "
+          f"victim in new placement: "
+          f"{victim in set(rec.placement.placement.tolist())}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""TOFA placement on a real compiled JAX program — the paper end to end.
+
+Compiles a small sharded train step on 16 (host-emulated) devices, extracts
+its communication graph from the HLO (the paper's profiling tool), prints
+the traffic heatmap (Fig. 1 analogue), and compares placement policies on a
+4x4 chip fabric with two unhealthy chips (Eq. 1 fault weighting).
+
+    PYTHONPATH=src python examples/placement_demo.py
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax                      # noqa: E402
+import jax.numpy as jnp         # noqa: E402
+import numpy as np              # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.core.placement import Fabric, assign_devices, compare_policies  # noqa: E402
+from repro.core.profiler import comm_graph_from_hlo  # noqa: E402
+
+
+def main():
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    D, F, B = 512, 2048, 32
+
+    def step(w1, w2, x):
+        h = jnp.einsum("bd,df->bf", x, w1)
+        h = jax.nn.relu(h)
+        y = jnp.einsum("bf,fd->bd", h, w2)
+        return ((y - x) ** 2).mean()
+
+    grad = jax.jit(
+        jax.grad(step, argnums=(0, 1)),
+        in_shardings=(NamedSharding(mesh, P("data", "model")),
+                      NamedSharding(mesh, P("model", "data")),
+                      NamedSharding(mesh, P("data", None))))
+    with mesh:
+        compiled = grad.lower(
+            jax.ShapeDtypeStruct((D, F), jnp.float32),
+            jax.ShapeDtypeStruct((F, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, D), jnp.float32)).compile()
+
+    comm = comm_graph_from_hlo(compiled.as_text(), n_devices=8)
+    print("== communication heatmap (8 logical shards) ==")
+    print(comm.heatmap(width=8))
+    print(f"total traffic: {comm.total_bytes()/1e6:.2f} MB/step\n")
+
+    # physical fabric: a 4x4 ICI torus (16 chips) hosting the 8-shard job;
+    # chips 5 and 6 (inside the default linear window!) flagged unhealthy
+    fabric = Fabric(pod_dims=(4, 4), n_pods=1)
+    p_f = np.zeros(16)
+    p_f[[5, 6]] = 0.05
+
+    print("== placement policies (hop-bytes; chips 5,6 unhealthy) ==")
+    rep = compare_policies(comm, fabric, p_f=p_f)
+    for pol, row in rep.items():
+        print(f"  {pol:8s} hop_bytes={row['hop_bytes']/1e6:10.2f}MB "
+              f"avg_dilation={row['avg_dilation']:.2f} "
+              f"faulty_chips_used={row['faulty_nodes_used']}")
+
+    a = assign_devices(comm, fabric, policy="tofa", p_f=p_f)
+    print(f"\nTOFA device permutation: {a.permutation.tolist()}")
+    print(f"hop-bytes vs linear: {a.improvement:+.1%} "
+          f"(faulty chips used: {a.result.faulty_nodes_used})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Serving demo: batched decode across architecture families.
+
+Exercises the KV cache (GQA), the compressed-latent cache (MLA), and the
+O(1)-in-sequence SSM state cache (mamba2) through the same decode_step API.
+
+    PYTHONPATH=src python examples/serve_demo.py
+"""
+import subprocess
+import sys
+
+ARCHS = ("smollm-135m", "minicpm3-4b", "mamba2-2.7b")
+
+if __name__ == "__main__":
+    rc = 0
+    for arch in ARCHS:
+        print(f"\n=== {arch} (reduced config) ===", flush=True)
+        rc |= subprocess.call(
+            [sys.executable, "-m", "repro.launch.serve", "--arch", arch,
+             "--reduced", "--batch", "2", "--prompt-len", "12",
+             "--gen", "8"])
+    raise SystemExit(rc)

@@ -1,0 +1,74 @@
+"""Fault injection models for batch simulation.
+
+The paper's model (Section 5.2): a fixed candidate set ``N_f`` of nodes each
+enters the failed state independently with probability ``p_f`` *per
+simulated scenario* (= per job instance).  A failed node can neither compute
+nor forward traffic; restart is instantaneous; no checkpointing.
+
+``WeibullArrival`` is a beyond-paper model in which failures arrive as a
+renewal process over continuous time (the LANL-trace shape cited by the
+paper [34]) so exposure scales with job duration.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+class FailureModel:
+    def sample_failed(self, rng: np.random.Generator, duration: float
+                      ) -> np.ndarray:
+        """Node ids in the failed state for one job instance."""
+        raise NotImplementedError
+
+
+@dataclasses.dataclass
+class NoFailures(FailureModel):
+    def sample_failed(self, rng, duration) -> np.ndarray:
+        return np.array([], dtype=np.int64)
+
+
+@dataclasses.dataclass
+class BernoulliPerJob(FailureModel):
+    """The paper's model: each candidate fails w.p. ``p_f`` per instance."""
+
+    candidates: np.ndarray
+    p_f: float
+
+    def sample_failed(self, rng, duration) -> np.ndarray:
+        cand = np.asarray(self.candidates)
+        mask = rng.random(len(cand)) < self.p_f
+        return cand[mask]
+
+    def outage_vector(self, n_nodes: int) -> np.ndarray:
+        """Ground-truth p_f vector (what a converged heartbeat estimator
+        reports to the placement policy)."""
+        p = np.zeros(n_nodes)
+        p[np.asarray(self.candidates)] = self.p_f
+        return p
+
+
+@dataclasses.dataclass
+class WeibullArrival(FailureModel):
+    """Failures arrive per node as a Weibull renewal process (shape < 1:
+    infant-mortality-heavy, per LANL data); a node hit during the job's
+    window is failed for that instance."""
+
+    candidates: np.ndarray
+    mtbf: float            # mean time between failures per candidate node
+    shape: float = 0.7
+
+    def sample_failed(self, rng, duration) -> np.ndarray:
+        cand = np.asarray(self.candidates)
+        # P(>=1 failure within the job window) for the renewal process;
+        # exponential bound is exact for shape == 1 and a good approximation
+        # in the duration << mtbf regime the simulator operates in
+        p = 1.0 - np.exp(-(duration / self.mtbf) ** self.shape)
+        mask = rng.random(len(cand)) < p
+        return cand[mask]
+
+    def outage_vector(self, n_nodes: int) -> np.ndarray:
+        p = np.zeros(n_nodes)
+        p[np.asarray(self.candidates)] = min(1.0, 1.0 / max(self.mtbf, 1e-9))
+        return p

@@ -1,0 +1,128 @@
+"""FANS — Fault Aware Node Selection: the Slurm-integration layer.
+
+Composes the pieces the paper wires into Slurm as five plugins:
+
+* ``NodeRegistry``      <- FATT topology plugin (coords + routing input)
+* ``HeartbeatMonitor``  <- Fault Aware Slurmctld + per-node NodeState
+* ``Job.comm``          <- LoadMatrix plugin (the profiled communication
+                           graph travels with the job submission)
+* ``Scheduler.submit``  <- srun --distribution={linear,random,greedy,topo,
+                           tofa}; FANS invokes the mapper and overrides the
+                           default task layout
+
+Beyond the paper, the scheduler also supports *draining* (administratively
+removing nodes whose estimated outage crosses a threshold) and *elastic
+re-placement*: when a running job's node goes down, the job is re-placed on
+the surviving healthy nodes and restarted (from the latest checkpoint if the
+checkpoint model is enabled in the batch simulator).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+
+import numpy as np
+
+from repro.cluster.heartbeat import HeartbeatMonitor, MovingAverage
+from repro.cluster.nodes import NodeRegistry, NodeState
+from repro.core.tofa import PlacementResult, place
+from repro.core.topology import TorusTopology
+from repro.sim.jobsim import successful_runtime
+from repro.sim.network import TorusNetwork
+from repro.workloads.patterns import Workload
+
+_job_ids = itertools.count(1)
+
+
+@dataclasses.dataclass
+class Job:
+    workload: Workload
+    distribution: str = "tofa"          # srun --distribution=
+    job_id: int = dataclasses.field(default_factory=lambda: next(_job_ids))
+
+
+@dataclasses.dataclass
+class JobRecord:
+    job: Job
+    placement: PlacementResult
+    state: str = "pending"              # pending | running | done | failed
+    runtime: float = 0.0
+    restarts: int = 0
+
+
+class Scheduler:
+    """slurmctld with the TOFA plugin set."""
+
+    def __init__(
+        self,
+        topo: TorusTopology,
+        net: TorusNetwork | None = None,
+        estimator=None,
+        drain_threshold: float = 0.5,
+        seed: int = 0,
+    ):
+        self.registry = NodeRegistry(topo)
+        self.topo = topo
+        self.net = net or TorusNetwork(topo)
+        self.monitor = HeartbeatMonitor(topo.n_nodes,
+                                        estimator or MovingAverage())
+        self.drain_threshold = drain_threshold
+        self.rng = np.random.default_rng(seed)
+        self.records: dict[int, JobRecord] = {}
+        self.queue: list[Job] = []
+
+    # -------------------------------------------------------------- health
+    def heartbeat_round(self, replies: np.ndarray,
+                        latencies: np.ndarray | None = None) -> None:
+        self.monitor.poll(replies, latencies)
+        p = self.monitor.outage_probabilities()
+        for i in np.flatnonzero(p >= self.drain_threshold):
+            if self.registry[int(i)].state == NodeState.UP:
+                self.registry.mark([int(i)], NodeState.DRAINED)
+
+    def estimated_outage(self) -> np.ndarray:
+        """p_f as FANS sees it: heartbeat estimate, drained nodes pinned."""
+        p = self.monitor.outage_probabilities()
+        for n in self.registry.nodes:
+            if n.state != NodeState.UP:
+                p[n.node_id] = 1.0
+        return p
+
+    # ---------------------------------------------------------- placement
+    def select_nodes_for(self, job: Job) -> PlacementResult:
+        """FANS: invoke the mapper with (G from LoadMatrix, H from FATT,
+        p_f from the heartbeat history)."""
+        p_f = self.estimated_outage()
+        return place(job.distribution, job.workload.comm, self.topo,
+                     p_f=p_f, rng=self.rng, available=self.registry.up_ids())
+
+    # ------------------------------------------------------------- running
+    def submit(self, job: Job) -> JobRecord:
+        res = self.select_nodes_for(job)
+        rec = JobRecord(job=job, placement=res, state="running",
+                        runtime=successful_runtime(job.workload,
+                                                   res.placement, self.net))
+        self.records[job.job_id] = rec
+        return rec
+
+    def handle_node_failure(self, node_ids) -> list[JobRecord]:
+        """Elastic re-placement (beyond paper): nodes went down; any running
+        job touching them is re-placed on surviving nodes and restarted."""
+        node_ids = [int(x) for x in np.atleast_1d(node_ids)]
+        self.registry.mark(node_ids, NodeState.DOWN)
+        replaced = []
+        for rec in self.records.values():
+            if rec.state != "running":
+                continue
+            used = set(int(x) for x in rec.placement.placement)
+            if used & set(node_ids):
+                res = self.select_nodes_for(rec.job)
+                rec.placement = res
+                rec.restarts += 1
+                rec.runtime = successful_runtime(rec.job.workload,
+                                                 res.placement, self.net)
+                replaced.append(rec)
+        return replaced
+
+    def complete(self, job_id: int) -> None:
+        self.records[job_id].state = "done"

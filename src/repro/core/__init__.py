@@ -1,0 +1,7 @@
+"""TOFA core: the paper's contribution (comm graphs, topology, mapping)."""
+from repro.core.comm_graph import CommGraph
+from repro.core.topology import TorusTopology, find_consecutive_healthy
+from repro.core.mapping import hop_bytes, avg_dilation, map_graph
+from repro.core.tofa import tofa_place, place, PlacementResult, POLICIES
+from repro.core.placement import Fabric, assign_devices, compare_policies
+from repro.core.profiler import profile_hlo, comm_graph_from_hlo

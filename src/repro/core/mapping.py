@@ -1,0 +1,390 @@
+"""Graph mapping: the Scotch dual-recursive-bipartitioning analogue.
+
+The paper delegates the topology-mapping problem to the Scotch library
+(``ScotchMap``).  This module implements the same class of algorithm from
+scratch so the framework has no external solver dependency:
+
+* ``bisect_graph``     weighted graph bisection of the guest (communication)
+                       graph via greedy graph growing + Fiduccia–Mattheyses
+                       (FM) boundary refinement.
+* ``bisect_nodes``     bisection of the host (topology) node set.  For
+                       contiguous torus windows this is a geometric split
+                       along the longest bounding-box dimension (what Scotch's
+                       architecture decomposition does for ``tleaf``/mesh
+                       targets); for arbitrary weighted node sets it is a
+                       distance-based sweep from a peripheral seed.
+* ``map_graph``        dual recursive bipartitioning: recursively co-bisect
+                       (processes, nodes) and assign at the leaves.
+* ``select_nodes``     when |V_H| > |V_G|, greedily grow a compact,
+                       low-weight (== healthy, per Eq. 1 weighting) node
+                       subset — the mechanism by which the 100x fault penalty
+                       steers the mapping away from failing nodes.
+
+Quality metric: ``hop_bytes`` = sum_{i<j} G_v[i,j] * d(place_i, place_j) —
+the standard dilation-volume objective these mappers minimise.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+# --------------------------------------------------------------------------
+# quality metrics
+# --------------------------------------------------------------------------
+
+def hop_bytes(G_v: np.ndarray, D: np.ndarray, placement: np.ndarray) -> float:
+    """0.5 * sum_{ij} G_v[i,j] * D[place(i), place(j)] — lower is better.
+
+    With the symmetric G_v convention (both directions accumulated into both
+    entries) this equals sum over unordered pairs of bytes * distance; an
+    asymmetric route-weight matrix D is implicitly symmetrised.
+    """
+    p = np.asarray(placement)
+    return float(0.5 * (G_v * D[np.ix_(p, p)]).sum())
+
+
+def avg_dilation(G_v: np.ndarray, D: np.ndarray, placement: np.ndarray) -> float:
+    """Traffic-weighted mean hop distance."""
+    tot = np.triu(G_v, 1).sum()
+    if tot == 0:
+        return 0.0
+    return hop_bytes(G_v, D, placement) / float(tot)
+
+
+# --------------------------------------------------------------------------
+# guest graph bisection (greedy growing + FM refinement)
+# --------------------------------------------------------------------------
+
+def bisect_graph(
+    W: np.ndarray,
+    size0: int,
+    rng: np.random.Generator | None = None,
+    fm_passes: int = 4,
+) -> np.ndarray:
+    """Bisect vertices {0..n-1} of weighted graph W into parts of size
+    (size0, n - size0), minimising cut weight.  Returns a bool array
+    ``in_part0`` of length n."""
+    n = W.shape[0]
+    assert 0 <= size0 <= n
+    if size0 == 0:
+        return np.zeros(n, dtype=bool)
+    if size0 == n:
+        return np.ones(n, dtype=bool)
+    rng = rng or np.random.default_rng(0)
+
+    # --- greedy graph growing from a peripheral (weakly connected) vertex
+    deg = W.sum(axis=1)
+    seed = int(np.argmin(deg))  # peripheral vertex
+    in0 = np.zeros(n, dtype=bool)
+    in0[seed] = True
+    # connection weight of every vertex to part 0
+    conn = W[seed].copy()
+    for _ in range(size0 - 1):
+        conn_masked = np.where(in0, -np.inf, conn)
+        nxt = int(np.argmax(conn_masked))
+        if not np.isfinite(conn_masked[nxt]):
+            nxt = int(rng.choice(np.flatnonzero(~in0)))
+        in0[nxt] = True
+        conn += W[nxt]
+
+    # --- FM refinement: swap boundary pairs with positive combined gain.
+    # gain(v) = (external weight) - (internal weight); moving v from its
+    # part to the other changes the cut by -gain(v).  We do balanced *pair*
+    # swaps (one from each side) so sizes stay exact.
+    for _ in range(fm_passes):
+        int0 = W[:, in0].sum(axis=1)       # weight to part 0
+        int1 = W[:, ~in0].sum(axis=1)      # weight to part 1
+        gain = np.where(in0, int1 - int0, int0 - int1)
+        # candidate movers: top-k positive-gain vertices on each side
+        side0 = np.flatnonzero(in0)
+        side1 = np.flatnonzero(~in0)
+        if side0.size == 0 or side1.size == 0:
+            break
+        a = side0[np.argsort(gain[side0])[::-1][:8]]
+        b = side1[np.argsort(gain[side1])[::-1][:8]]
+        best, pair = 0.0, None
+        for u in a:
+            for v in b:
+                # swapping u<->v: delta_cut = -(gain_u + gain_v) + 2*W[u,v]
+                d = gain[u] + gain[v] - 2.0 * W[u, v]
+                if d > best + 1e-12:
+                    best, pair = d, (u, v)
+        if pair is None:
+            break
+        u, v = pair
+        in0[u], in0[v] = False, True
+    return in0
+
+
+# --------------------------------------------------------------------------
+# host node-set bisection
+# --------------------------------------------------------------------------
+
+def bisect_nodes(
+    nodes: np.ndarray,
+    coords: np.ndarray,
+    size0: int,
+    D: np.ndarray | None = None,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Split ``nodes`` into (size0, rest) keeping each half compact.
+
+    Geometric split: order nodes along the longest bounding-box dimension of
+    their coordinates (lexicographic within), take the first ``size0``.
+    Falls back to a distance sweep from a peripheral node when ``D`` is
+    given and coordinates are degenerate (e.g. fault-weighted selection).
+    """
+    nodes = np.asarray(nodes)
+    if size0 <= 0:
+        return nodes[:0], nodes
+    if size0 >= len(nodes):
+        return nodes, nodes[:0]
+    sub = coords[nodes]  # (m, ndim)
+    spans = sub.max(axis=0) - sub.min(axis=0)
+    dim = int(np.argmax(spans))
+    if spans[dim] == 0 and D is not None:
+        # all nodes co-located geometrically: sweep by weighted distance
+        seed_local = 0
+        order = np.argsort(D[nodes[seed_local]][nodes], kind="stable")
+    else:
+        key = [sub[:, dim]]
+        for k in range(sub.shape[1]):
+            if k != dim:
+                key.append(sub[:, k])
+        order = np.lexsort(tuple(reversed(key)))
+    ordered = nodes[order]
+    return ordered[:size0], ordered[size0:]
+
+
+def snake_order(nodes: np.ndarray, coords: np.ndarray) -> np.ndarray:
+    """Order ``nodes`` along a boustrophedon (snake) curve of their coords.
+
+    Consecutive nodes in the returned order are (on full grids) one hop
+    apart, which makes a sequential seed near-optimal for banded guests —
+    the regular-pattern regime where the paper observes default-slurm
+    winning (Section 5.1, LAMMPS 256).
+    """
+    nodes = np.asarray(nodes)
+    sub = coords[nodes].astype(np.int64)
+    eff = sub.copy()
+    ndim = sub.shape[1]
+    for d in range(1, ndim):
+        parity = sub[:, :d].sum(axis=1) % 2
+        hi = sub[:, d].max() if len(sub) else 0
+        eff[:, d] = np.where(parity == 1, hi - sub[:, d], sub[:, d])
+    order = np.lexsort(tuple(eff[:, d] for d in reversed(range(ndim))))
+    return nodes[order]
+
+
+# --------------------------------------------------------------------------
+# node subset selection (|V_H| > |V_G|)
+# --------------------------------------------------------------------------
+
+def select_nodes(D: np.ndarray, count: int, seed: int | None = None) -> np.ndarray:
+    """Greedily grow a compact low-weight subset of ``count`` nodes.
+
+    ``D`` is the (fault-aware) pairwise weight matrix of the full topology.
+    Start from the node with the lowest total weight to its ``count``
+    nearest peers (cheapest healthy region) and repeatedly add the node with
+    minimum total weight to the chosen set.  The Eq. 1 fault penalty (100x)
+    makes faulty nodes effectively unselectable unless unavoidable.
+    """
+    n = D.shape[0]
+    count = min(count, n)
+    if seed is None:
+        # cost of the best `count`-node ball centred at each node
+        part = np.partition(D, count - 1, axis=1)[:, :count]
+        seed = int(np.argmin(part.sum(axis=1)))
+    chosen = np.zeros(n, dtype=bool)
+    chosen[seed] = True
+    cost = D[seed].copy()
+    for _ in range(count - 1):
+        masked = np.where(chosen, np.inf, cost)
+        nxt = int(np.argmin(masked))
+        chosen[nxt] = True
+        cost += D[nxt]
+    return np.flatnonzero(chosen)
+
+
+# --------------------------------------------------------------------------
+# dual recursive bipartitioning
+# --------------------------------------------------------------------------
+
+def map_graph(
+    G_w: np.ndarray,
+    nodes: np.ndarray,
+    coords: np.ndarray,
+    D: np.ndarray | None = None,
+    rng: np.random.Generator | None = None,
+    refine: bool = True,
+    portfolio: bool = True,
+) -> np.ndarray:
+    """ScotchMap analogue: map processes {0..n-1} onto ``nodes``.
+
+    ``G_w``    (n, n) guest edge weights (bytes, typically CommGraph.G_v)
+    ``nodes``  host node ids available (len >= n)
+    ``coords`` (N, ndim) coordinates of *all* host nodes (for geometric
+               bisection)
+    ``D``      optional (N, N) weight matrix for refinement + degenerate
+               splits
+
+    Like Scotch, runs a small strategy *portfolio*: dual recursive
+    bipartitioning AND a sequential seed (which is near-optimal for banded /
+    regular patterns — cf. the paper's LAMMPS discussion in Section 5.1),
+    refines each with pairwise swaps, and keeps the best by hop-bytes.
+
+    Returns placement: array of node ids, one per process.
+    """
+    n = G_w.shape[0]
+    nodes = np.asarray(nodes)
+    assert len(nodes) >= n, "not enough nodes"
+    rng = rng or np.random.default_rng(0)
+    placement = np.full(n, -1, dtype=np.int64)
+
+    def rec(procs: np.ndarray, navail: np.ndarray) -> None:
+        if len(procs) == 0:
+            return
+        if len(procs) == 1:
+            # put the single proc on the first node (splits kept compact)
+            placement[procs[0]] = navail[0]
+            return
+        half_nodes = len(navail) // 2
+        # processes split proportionally to the node halves, but never more
+        # procs than nodes on either side
+        p0 = min(max(len(procs) * half_nodes // len(navail),
+                     len(procs) - (len(navail) - half_nodes)), half_nodes)
+        sub = G_w[np.ix_(procs, procs)]
+        in0 = bisect_graph(sub, p0, rng=rng)
+        n0, n1 = bisect_nodes(navail, coords, half_nodes, D=D)
+        rec(procs[in0], n0)
+        rec(procs[~in0], n1)
+
+    rec(np.arange(n), nodes)
+
+    if D is None:
+        return placement
+
+    candidates = [placement]
+    if portfolio:
+        # sequential seed: process i -> i-th node along a snake curve of the
+        # available nodes (near-optimal chain for banded guests)
+        candidates.append(snake_order(nodes, coords)[:n].copy())
+    if refine:
+        candidates = [_pairwise_refine(G_w, D, c) for c in candidates]
+    scores = [hop_bytes(G_w, D, c) for c in candidates]
+    return candidates[int(np.argmin(scores))]
+
+
+def _pairwise_refine(
+    G_w: np.ndarray, D: np.ndarray, placement: np.ndarray,
+    max_passes: int = 3,
+) -> np.ndarray:
+    """Greedy pairwise-swap refinement of a full placement under hop-bytes.
+
+    After recursive bipartitioning, try swapping the node assignments of
+    process pairs when it lowers sum_ij G_w[i,j] * D[p_i, p_j].  This is the
+    mapping-level counterpart of Scotch's recursive refinement and typically
+    shaves another few percent of hop-bytes.
+    """
+    p = placement.copy()
+    n = len(p)
+    for _ in range(max_passes):
+        improved = False
+        # cost contribution of each process: c_i = sum_j G_w[i,j] D[p_i, p_j]
+        Dp = D[np.ix_(p, p)]
+        contrib = (G_w * Dp).sum(axis=1)
+        order = np.argsort(contrib)[::-1][: min(n, 64)]  # worst offenders
+        for i in order:
+            best_d, best_j = 0.0, -1
+            mask = np.ones(n, dtype=bool)
+            mask[i] = False
+            for j in range(n):
+                if j == i:
+                    continue
+                mask[j] = False
+                pi, pj = p[j], p[i]  # candidate swapped assignments
+                # cost with i@pi, j@pj vs current, others fixed
+                new = float(G_w[i, mask] @ D[pi][p[mask]]) \
+                    + float(G_w[j, mask] @ D[pj][p[mask]]) \
+                    + G_w[i, j] * D[pi, pj]
+                old = float(G_w[i, mask] @ D[p[i]][p[mask]]) \
+                    + float(G_w[j, mask] @ D[p[j]][p[mask]]) \
+                    + G_w[i, j] * D[p[i], p[j]]
+                mask[j] = True
+                d = old - new
+                if d > best_d + 1e-9:
+                    best_d, best_j = d, j
+            if best_j >= 0:
+                p[i], p[best_j] = p[best_j], p[i]
+                improved = True
+        if not improved:
+            break
+    return p
+
+
+# --------------------------------------------------------------------------
+# baseline placement policies of Section 5.1
+# --------------------------------------------------------------------------
+
+def linear_placement(n_procs: int, nodes: np.ndarray) -> np.ndarray:
+    """default-slurm: iterate available nodes sequentially."""
+    nodes = np.asarray(nodes)
+    return nodes[:n_procs].copy()
+
+
+def random_placement(
+    n_procs: int, nodes: np.ndarray, rng: np.random.Generator
+) -> np.ndarray:
+    nodes = np.asarray(nodes)
+    return rng.choice(nodes, size=n_procs, replace=False)
+
+
+def greedy_placement(
+    G_w: np.ndarray, nodes: np.ndarray, D: np.ndarray,
+) -> np.ndarray:
+    """The paper's Greedy baseline: sort process pairs by traffic, place the
+    heaviest pairs as close as possible (starting from one hop)."""
+    n = G_w.shape[0]
+    nodes = np.asarray(nodes)
+    iu = np.triu_indices(n, 1)
+    order = np.argsort(G_w[iu])[::-1]
+    pairs = list(zip(iu[0][order], iu[1][order]))
+
+    placement = np.full(n, -1, dtype=np.int64)
+    used = np.zeros(D.shape[0], dtype=bool)
+    avail_mask = np.zeros(D.shape[0], dtype=bool)
+    avail_mask[nodes] = True
+
+    def nearest_free(anchor: int) -> int:
+        cand = np.where(~used & avail_mask, D[anchor], np.inf)
+        return int(np.argmin(cand))
+
+    def first_free() -> int:
+        free = np.flatnonzero(~used & avail_mask)
+        return int(free[0])
+
+    for i, j in pairs:
+        if G_w[i, j] <= 0:
+            break
+        pi, pj = placement[i], placement[j]
+        if pi < 0 and pj < 0:
+            a = first_free()
+            placement[i] = a
+            used[a] = True
+            b = nearest_free(a)
+            placement[j] = b
+            used[b] = True
+        elif pi < 0:
+            a = nearest_free(pj)
+            placement[i] = a
+            used[a] = True
+        elif pj < 0:
+            b = nearest_free(pi)
+            placement[j] = b
+            used[b] = True
+    # any untouched processes (no traffic): fill linearly
+    for i in range(n):
+        if placement[i] < 0:
+            a = first_free()
+            placement[i] = a
+            used[a] = True
+    return placement

@@ -1,0 +1,208 @@
+"""Device assignment for JAX meshes — `srun --distribution=TOFA` analogue.
+
+On an MPI cluster the placement degree of freedom is *which node runs which
+rank*.  In JAX/XLA the same degree of freedom is the order of the device
+array handed to ``jax.sharding.Mesh``: logical mesh coordinate ``k`` (in
+row-major flattening) executes on ``devices.flat[k]``.  Permuting the device
+list is therefore exactly rank placement, and the compiled program is
+unchanged — only the physical realisation of each replica group moves.
+
+This module computes that permutation:
+
+  1. profile the compiled step (``core.profiler``) -> guest graph ``G`` over
+     logical shard ids;
+  2. model the physical fabric (``core.topology``) — v5e pod = 16x16 2D
+     torus of chips over ICI; multi-pod adds a DCN dimension modelled as a
+     high-cost link layer;
+  3. health feed (``cluster.heartbeat``) -> per-chip outage probabilities;
+  4. TOFA (``core.tofa``) maps logical shards onto physical chips.
+
+``placement[k] = physical chip id of logical shard k``; the mesh builder
+inverts this into a device reordering.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .comm_graph import CommGraph
+from .mapping import avg_dilation, hop_bytes
+from .tofa import PlacementResult, place
+from .topology import TorusTopology
+
+# DCN (inter-pod) links are ~an order of magnitude slower than ICI; in the
+# hop-cost model one pod-crossing counts as this many ICI hops.
+DCN_HOP_COST = 10.0
+
+
+@dataclasses.dataclass(frozen=True)
+class Fabric:
+    """Physical fabric: per-pod 2D/3D torus of chips (+ optional pod axis)."""
+
+    pod_dims: tuple[int, ...] = (16, 16)   # v5e pod: 16x16 ICI torus
+    n_pods: int = 1
+    dcn_hop_cost: float = DCN_HOP_COST
+
+    @property
+    def chips_per_pod(self) -> int:
+        return int(np.prod(self.pod_dims))
+
+    @property
+    def n_chips(self) -> int:
+        return self.chips_per_pod * self.n_pods
+
+    def torus(self) -> TorusTopology:
+        return TorusTopology(self.pod_dims)
+
+    def hop_matrix(self) -> np.ndarray:
+        """(n_chips, n_chips) hop costs: intra-pod ICI hops; pod crossings
+        add ``dcn_hop_cost`` (chips first grouped by pod, row-major)."""
+        t = self.torus()
+        intra = t.hop_matrix()
+        n, P = self.chips_per_pod, self.n_pods
+        full = np.empty((n * P, n * P))
+        for a in range(P):
+            for b in range(P):
+                blk = intra.copy()
+                if a != b:
+                    blk = blk + self.dcn_hop_cost
+                full[a * n:(a + 1) * n, b * n:(b + 1) * n] = blk
+        return full
+
+    def weight_matrix(self, p_f: np.ndarray | None = None,
+                      straggler: np.ndarray | None = None) -> np.ndarray:
+        """Eq. 1 fault-aware weights on the multi-pod fabric."""
+        if p_f is None and straggler is None:
+            return self.hop_matrix()
+        n, P = self.chips_per_pod, self.n_pods
+        p_f = np.zeros(self.n_chips) if p_f is None else np.asarray(p_f)
+        t = self.torus()
+        full = np.empty((self.n_chips, self.n_chips))
+        for a in range(P):
+            for b in range(P):
+                if a == b:
+                    s = straggler[a * n:(a + 1) * n] if straggler is not None else None
+                    blk = t.weight_matrix(p_f[a * n:(a + 1) * n], straggler=s)
+                else:
+                    # conservative cross-pod model: ICI hops to/from the pod
+                    # egress + DCN cost; fault penalty applies if either
+                    # endpoint chip is unhealthy.
+                    blk = t.hop_matrix() + self.dcn_hop_cost
+                    fa = p_f[a * n:(a + 1) * n] > 0
+                    fb = p_f[b * n:(b + 1) * n] > 0
+                    blk = blk + 100.0 * (fa[:, None] | fb[None, :])
+                full[a * n:(a + 1) * n, b * n:(b + 1) * n] = blk
+        return full
+
+    def coords_array(self) -> np.ndarray:
+        """(n_chips, ndim+1) coordinates: (pod, *torus coords)."""
+        t = self.torus().coords_array()
+        out = []
+        for pod in range(self.n_pods):
+            pod_col = np.full((t.shape[0], 1), pod)
+            out.append(np.concatenate([pod_col, t], axis=1))
+        return np.concatenate(out, axis=0)
+
+
+@dataclasses.dataclass
+class DeviceAssignment:
+    """Result of a placement policy applied to a mesh."""
+
+    permutation: np.ndarray     # perm[k] = device index for logical shard k
+    result: PlacementResult
+    hop_bytes_linear: float     # baseline (identity assignment) cost
+    hop_bytes_placed: float     # cost under this assignment
+
+    @property
+    def improvement(self) -> float:
+        if self.hop_bytes_linear <= 0:
+            return 0.0
+        return 1.0 - self.hop_bytes_placed / self.hop_bytes_linear
+
+
+class _FabricTopology(TorusTopology):
+    """Adapter: expose a Fabric to tofa.place (hop/weight matrices only)."""
+
+    def __init__(self, fabric: Fabric, p_f=None, straggler=None):
+        # TorusTopology is a frozen dataclass; bypass its immutability for
+        # this adapter's private fields.
+        object.__setattr__(self, "dims", (fabric.n_chips,))
+        object.__setattr__(self, "_fabric", fabric)
+        object.__setattr__(self, "_hops", fabric.hop_matrix())
+        object.__setattr__(self, "_p_f", p_f)
+        object.__setattr__(self, "_straggler", straggler)
+        object.__setattr__(self, "_coords", fabric.coords_array())
+
+    @property
+    def n_nodes(self) -> int:
+        return self._fabric.n_chips
+
+    def hop_matrix(self) -> np.ndarray:
+        return self._hops
+
+    def weight_matrix(self, p_f=None, c=1.0, straggler=None) -> np.ndarray:
+        return self._fabric.weight_matrix(
+            p_f if p_f is not None else self._p_f,
+            straggler if straggler is not None else self._straggler)
+
+    def coords_array(self) -> np.ndarray:
+        return self._coords
+
+
+def assign_devices(
+    comm: CommGraph,
+    fabric: Fabric,
+    policy: str = "tofa",
+    p_f: np.ndarray | None = None,
+    rng: np.random.Generator | None = None,
+) -> DeviceAssignment:
+    """Compute a device permutation for ``Mesh`` construction.
+
+    The returned permutation satisfies: logical shard k should run on
+    physical chip ``permutation[k]``.  For JAX:
+
+        devs = np.asarray(jax.devices())[assignment.permutation]
+        mesh = Mesh(devs.reshape(shape), axis_names)
+
+    (On real hardware ``jax.devices()`` is ordered by physical coordinates,
+    so indexing by chip id is indexing by physical position.)
+    """
+    if comm.n > fabric.n_chips:
+        raise ValueError(
+            f"comm graph has {comm.n} shards but fabric has only "
+            f"{fabric.n_chips} chips")
+    # comm.n < n_chips is fine: the job occupies a subset of the fabric
+    # (placement[k] is then a chip id, not a permutation of 0..n-1)
+    topo = _FabricTopology(fabric, p_f=p_f)
+    res = place(policy, comm, topo, p_f=p_f, rng=rng)
+    hops = topo.hop_matrix()
+    identity = np.arange(comm.n)
+    return DeviceAssignment(
+        permutation=res.placement.copy(),
+        result=res,
+        hop_bytes_linear=hop_bytes(comm.G_v, hops, identity),
+        hop_bytes_placed=hop_bytes(comm.G_v, hops, res.placement),
+    )
+
+
+def compare_policies(
+    comm: CommGraph,
+    fabric: Fabric,
+    policies=("linear", "random", "greedy", "topo", "tofa"),
+    p_f: np.ndarray | None = None,
+    seed: int = 0,
+) -> dict:
+    """Hop-bytes and dilation per policy — the placement-quality report."""
+    out = {}
+    topo = _FabricTopology(fabric, p_f=p_f)
+    hops = topo.hop_matrix()
+    for pol in policies:
+        rng = np.random.default_rng(seed)
+        res = place(pol, comm, topo, p_f=p_f, rng=rng)
+        out[pol] = {
+            "hop_bytes": hop_bytes(comm.G_v, hops, res.placement),
+            "avg_dilation": avg_dilation(comm.G_v, hops, res.placement),
+            "faulty_nodes_used": res.faulty_nodes_used,
+        }
+    return out

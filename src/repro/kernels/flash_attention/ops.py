@@ -1,0 +1,30 @@
+"""flash_attention — jit'd public wrapper, backend dispatch.
+
+On TPU the Pallas kernel (kernel.py) runs; elsewhere (and under
+``interpret=True`` testing) the pure-jnp oracle (ref.py) is used.  Both
+share one contract; tests sweep shapes/dtypes asserting allclose.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "impl",
+                                             "q_block", "kv_block"))
+def flash_attention(q, k, v, *, causal: bool = True, impl: str = "auto",
+                    q_block: int = 512, kv_block: int = 1024):
+    """q (B,H,Sq,Dh), k/v (B,Hkv,Sk,Dh) -> (B,H,Sq,Dh)."""
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "pallas":
+        from repro.kernels.flash_attention.kernel import flash_attention_tpu
+        return flash_attention_tpu(q, k, v, causal=causal)
+    if impl == "pallas_interpret":
+        from repro.kernels.flash_attention.kernel import flash_attention_tpu
+        return flash_attention_tpu(q, k, v, causal=causal, interpret=True)
+    return flash_attention_ref(q, k, v, causal=causal,
+                               q_block=q_block, kv_block=kv_block)

@@ -1,0 +1,96 @@
+"""Flash attention — pure-jnp oracle (online softmax, double-chunked).
+
+This is simultaneously (a) the correctness reference for the Pallas TPU
+kernel and (b) the production attention path for long sequences on
+non-TPU backends: memory is O(S * block) instead of O(S^2), which is what
+makes the 32k-prefill cells compile within per-device HBM.
+
+Contract (shared with kernel.py / ops.py):
+  q (B, H, Sq, Dh), k/v (B, Hkv, Sk, Dh), GQA via H % Hkv == 0
+  causal masking aligns the *ends* of q and k (standard decode/prefill
+  convention: query i attends to keys j <= i + (Sk - Sq)).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(
+    q: jax.Array, k: jax.Array, v: jax.Array, *,
+    causal: bool = True,
+    q_block: int = 512,
+    kv_block: int = 1024,
+) -> jax.Array:
+    B, H, Sq, Dh = q.shape
+    _, Hkv, Sk, _ = k.shape
+    groups = H // Hkv
+    if groups > 1:
+        k = jnp.repeat(k, groups, axis=1)
+        v = jnp.repeat(v, groups, axis=1)
+
+    q_block = min(q_block, Sq)
+    kv_block = min(kv_block, Sk)
+    # pad to block multiples
+    pq = (-Sq) % q_block
+    pk = (-Sk) % kv_block
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    nq = q.shape[2] // q_block
+    nk = k.shape[2] // kv_block
+    offset = Sk - Sq  # causal alignment
+
+    scale = 1.0 / math.sqrt(Dh)
+    qb = q.reshape(B, H, nq, q_block, Dh)
+    kb = k.reshape(B, H, nk, kv_block, Dh)
+    vb = v.reshape(B, H, nk, kv_block, Dh)
+
+    @functools.partial(jax.checkpoint, static_argnums=())
+    def q_step(qi, q_chunk):
+        """q_chunk (B,H,q_block,Dh) -> attention output for this q block.
+
+        jax.checkpoint: the VJP recomputes the online-softmax internals
+        (the ``p`` blocks) instead of saving them — this IS the flash
+        backward-pass memory strategy, without it the scan residuals are
+        O(S^2) again."""
+        acc0 = jnp.zeros(q_chunk.shape, jnp.float32)
+        m0 = jnp.full(q_chunk.shape[:3], NEG_INF, jnp.float32)
+        l0 = jnp.zeros(q_chunk.shape[:3], jnp.float32)
+
+        def kv_step(carry, kj):
+            acc, m, l = carry
+            kc = jax.lax.dynamic_index_in_dim(kb, kj, 2, keepdims=False)
+            vc = jax.lax.dynamic_index_in_dim(vb, kj, 2, keepdims=False)
+            s = jnp.einsum("bhqd,bhkd->bhqk", q_chunk, kc,
+                           preferred_element_type=jnp.float32) * scale
+            qpos = qi * q_block + jnp.arange(q_block) + offset
+            kpos = kj * kv_block + jnp.arange(kv_block)
+            mask = kpos[None, :] <= qpos[:, None] if causal else \
+                jnp.ones((q_block, kv_block), bool)
+            # also mask key padding
+            mask = mask & (kpos[None, :] < Sk)
+            s = jnp.where(mask[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p, vc.astype(jnp.float32))
+            return (acc_new, m_new, l_new), None
+
+        (acc, m, l), _ = jax.lax.scan(kv_step, (acc0, m0, l0),
+                                      jnp.arange(nk))
+        return acc / jnp.maximum(l, 1e-30)[..., None]
+
+    with jax.named_scope("flash_attention"):
+        out = jax.lax.map(lambda i: q_step(i, qb[:, :, i]), jnp.arange(nq))
+    out = jnp.moveaxis(out, 0, 2).reshape(B, H, nq * q_block, Dh)
+    return out[:, :, :Sq].astype(q.dtype)

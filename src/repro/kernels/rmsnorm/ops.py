@@ -1,0 +1,19 @@
+"""rmsnorm — jit'd public wrapper with backend dispatch."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "impl"))
+def rmsnorm(x, w, *, eps: float = 1e-6, impl: str = "auto"):
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl in ("pallas", "pallas_interpret"):
+        from repro.kernels.rmsnorm.kernel import rmsnorm_tpu
+        return rmsnorm_tpu(x, w, eps=eps,
+                           interpret=(impl == "pallas_interpret"))
+    return rmsnorm_ref(x, w, eps=eps)

@@ -1,0 +1,2 @@
+"""RMSNorm oracle — the models/layers.py implementation."""
+from repro.models.layers import rmsnorm as rmsnorm_ref  # noqa: F401

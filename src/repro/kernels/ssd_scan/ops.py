@@ -1,0 +1,31 @@
+"""ssd_scan — jit'd public wrapper with backend dispatch + layout shim."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "impl"))
+def ssd_scan(x, dt, A, B, C, *, chunk: int = 128, impl: str = "auto"):
+    """Model-layer layout: x (B,S,H,P), dt (B,S,H), A (H,), B/C (B,S,G,N)
+    -> y (B,S,H,P), final_state (B,H,P,N).
+
+    Pre-conditions dt into ``xdt``/``dA`` and dispatches to the Pallas
+    kernel (TPU), its interpreter (tests), or the exact recurrence ref."""
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    xdt = jnp.moveaxis(x * dt[..., None], 1, 2)        # (B,H,S,P)
+    dA = jnp.moveaxis(dt * A[None, None, :], 1, 2)     # (B,H,S)
+    Bk = jnp.moveaxis(B, 1, 2)                         # (B,G,S,N)
+    Ck = jnp.moveaxis(C, 1, 2)
+    if impl in ("pallas", "pallas_interpret"):
+        from repro.kernels.ssd_scan.kernel import ssd_scan_tpu
+        y, st = ssd_scan_tpu(xdt, dA, Bk, Ck, chunk=chunk,
+                             interpret=(impl == "pallas_interpret"))
+    else:
+        y, st = ssd_scan_ref(xdt, dA, Bk, Ck, chunk=chunk)
+    return jnp.moveaxis(y, 1, 2), st

@@ -1,0 +1,53 @@
+"""SSD scan oracle: thin wrapper over the models/ssm.py chunked algorithm
+with the kernel's (B, H, S, ...) layout contract."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.ssm import ssd_chunked
+
+
+def ssd_scan_ref(xdt, dA, B, C, chunk: int):
+    """Kernel-layout reference.
+
+    xdt (B,H,S,P)  x pre-multiplied by dt
+    dA  (B,H,S)    dt * A  (negative decays)
+    B,C (B,G,S,N)
+    ->  y (B,H,S,P), final_state (B,H,P,N)
+
+    Implemented by calling the model-layer reference with dt == 1 (the dt
+    factors are folded into xdt / dA, exactly what the kernel consumes).
+    """
+    b, H, S, P = xdt.shape
+    x_l = jnp.moveaxis(xdt, 1, 2)               # (B,S,H,P)
+    dt_l = jnp.ones((b, S, H), xdt.dtype)
+    B_l = jnp.moveaxis(B, 1, 2)                 # (B,S,G,N)
+    C_l = jnp.moveaxis(C, 1, 2)
+    # ssd_chunked computes dA = dt * A with per-head A; here decay varies
+    # per (b,s,h), so inject via the dt slot with A = 1... not expressible.
+    # Instead run the direct recurrence definition (exact, O(S)):
+    return _direct(xdt, dA, B, C)
+
+
+def _direct(xdt, dA, B, C):
+    """Exact sequential recurrence (the SSD definition)."""
+    b, H, S, P = xdt.shape
+    G, N = B.shape[1], B.shape[3]
+    rep = H // G
+    Bh = jnp.repeat(B, rep, axis=1) if rep > 1 else B   # (b,H,S,N)
+    Ch = jnp.repeat(C, rep, axis=1) if rep > 1 else C
+
+    import jax
+
+    def step(state, inp):
+        x_s, dA_s, B_s, C_s = inp                # (b,H,P),(b,H),(b,H,N)x2
+        state = state * jnp.exp(dA_s)[..., None, None] \
+            + jnp.einsum("bhp,bhn->bhpn", x_s, B_s)
+        y = jnp.einsum("bhn,bhpn->bhp", C_s, state)
+        return state, y
+
+    xs = (jnp.moveaxis(xdt, 2, 0), jnp.moveaxis(dA, 2, 0),
+          jnp.moveaxis(Bh, 2, 0), jnp.moveaxis(Ch, 2, 0))
+    state0 = jnp.zeros((b, H, P, N), jnp.float32)
+    final, ys = jax.lax.scan(step, state0, xs)
+    return jnp.moveaxis(ys, 0, 2).astype(xdt.dtype), final

@@ -1,0 +1,69 @@
+"""Production meshes + TOFA device assignment.
+
+``make_production_mesh`` builds the logical mesh (a FUNCTION, never a
+module-level constant — importing this module must not touch jax device
+state).  ``make_tofa_mesh`` is `srun --distribution=TOFA` for XLA: it
+profiles the compiled step's collectives, runs TOFA against the physical
+fabric + node health, and hands ``Mesh`` a permuted device array.  The
+compiled program is identical; only which physical chip owns which logical
+coordinate changes.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import jax
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh_with_devices(devices, shape, axes):
+    """Mesh from an explicit (possibly permuted) device list."""
+    import jax
+    from jax.sharding import Mesh
+    devs = np.asarray(devices).reshape(shape)
+    return Mesh(devs, axes)
+
+
+def make_tofa_mesh(
+    hlo_text: str,
+    *,
+    multi_pod: bool = False,
+    p_f: Optional[np.ndarray] = None,
+    policy: str = "tofa",
+):
+    """Device-permuted production mesh.
+
+    1. ``core.profiler`` extracts the per-shard traffic matrix from the
+       compiled HLO (the paper's LoadMatrix input);
+    2. ``core.placement.assign_devices`` runs the requested policy against
+       the v5e fabric model (FATT input) and heartbeat health (p_f);
+    3. the permutation is applied to ``jax.devices()``.
+
+    Returns (mesh, DeviceAssignment) — the assignment carries hop-bytes
+    before/after for the §Roofline placement term.
+    """
+    import jax
+
+    from repro.core.placement import Fabric, assign_devices
+    from repro.core.profiler import comm_graph_from_hlo
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    fabric = Fabric(pod_dims=(16, 16), n_pods=2 if multi_pod else 1)
+    comm = comm_graph_from_hlo(hlo_text, n_devices=n)
+    assignment = assign_devices(comm, fabric, policy=policy, p_f=p_f)
+    devs = np.asarray(jax.devices()[:n])
+    # logical shard k runs on physical chip assignment.permutation[k]; on
+    # real hardware jax.devices() is coordinate-ordered, so indexing by
+    # chip id == physical position.
+    mesh = make_mesh_with_devices(devs[assignment.permutation], shape, axes)
+    return mesh, assignment

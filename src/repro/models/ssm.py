@@ -1,0 +1,219 @@
+"""Mamba2 — state-space duality (SSD) blocks, pure-JAX chunked algorithm.
+
+Implements the SSD "chunked dual" form of arXiv:2405.21060: the sequence is
+split into chunks; within a chunk the quadratic (attention-like) form runs
+on the MXU, between chunks an O(S/Q) state recurrence propagates.  This file
+is the *reference*; ``repro.kernels.ssd_scan`` is the Pallas TPU kernel with
+the same contract (tested against this module).
+
+Shapes (mamba2 conventions):
+  x   (B, S, H, P)   heads x head_dim, H*P = expand * d_model
+  dt  (B, S, H)      softplus-positive step sizes
+  A   (H,)           negative decay rates (A = -exp(a_log))
+  B,C (B, S, G, N)   input/output projections, G groups, N = d_state
+State: (B, H, P, N)
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ParamDef, rmsnorm
+
+
+# --------------------------------------------------------------------------
+# schema
+# --------------------------------------------------------------------------
+
+def mamba2_schema(cfg: ModelConfig, layers: int) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.expand * d
+    H = d_in // s.head_dim
+    G, N = s.n_groups, s.d_state
+    L = (layers,)
+    out_scale = 0.02 / math.sqrt(2 * cfg.n_layers)
+    # fused in_proj: [z, x, B, C, dt]
+    proj = 2 * d_in + 2 * G * N + H
+    return {
+        "in_proj": ParamDef(L + (d, proj), ("layers", "embed", "ssm_inner")),
+        "conv_w": ParamDef(L + (s.d_conv, d_in + 2 * G * N),
+                           ("layers", None, "ssm_inner")),
+        "conv_b": ParamDef(L + (d_in + 2 * G * N,), ("layers", "ssm_inner"),
+                           init="zeros"),
+        "a_log": ParamDef(L + (H,), ("layers", "heads"), init="ones"),
+        "dt_bias": ParamDef(L + (H,), ("layers", "heads"), init="zeros"),
+        "d_skip": ParamDef(L + (H,), ("layers", "heads"), init="ones"),
+        "norm_w": ParamDef(L + (d_in,), ("layers", "ssm_inner"), init="ones"),
+        "out_proj": ParamDef(L + (d_in, d), ("layers", "ssm_inner", "embed"),
+                             scale=out_scale),
+    }
+
+
+# --------------------------------------------------------------------------
+# SSD core (chunked scan) — reference implementation
+# --------------------------------------------------------------------------
+
+def _segsum(x):
+    """(..., Q) -> (..., Q, Q) with out[..., i, j] = sum_{j < k <= i} x_k,
+    -inf above the diagonal (lower-triangular cumulative sums)."""
+    Q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, init_state=None):
+    """SSD forward.  Returns (y (B,S,H,P), final_state (B,H,P,N)).
+
+    Discretisation: dA = dt * A;  dB = dt * B (ZOH-simplified, as mamba2).
+    """
+    with jax.named_scope("ssd_chunked"):
+        return _ssd_chunked_impl(x, dt, A, B, C, chunk, init_state)
+
+
+def _ssd_chunked_impl(x, dt, A, B, C, chunk: int, init_state=None):
+    b, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    assert S % chunk == 0, f"seq {S} not divisible by chunk {chunk}"
+    nc = S // chunk
+    # heads per group replication
+    rep = H // G
+    Bh = jnp.repeat(B, rep, axis=2) if rep > 1 else B   # (b,S,H,N)
+    Ch = jnp.repeat(C, rep, axis=2) if rep > 1 else C
+
+    xc = x.reshape(b, nc, chunk, H, P)
+    dtc = dt.reshape(b, nc, chunk, H)
+    Bc = Bh.reshape(b, nc, chunk, H, N)
+    Cc = Ch.reshape(b, nc, chunk, H, N)
+
+    dA = dtc * A[None, None, None, :]              # (b,nc,Q,H), negative
+    dA_hc = jnp.moveaxis(dA, -1, 1)                # (b,H,nc,Q)
+    dA_cs = jnp.cumsum(dA_hc, axis=-1)             # cumulative within chunk
+
+    # 1) intra-chunk (quadratic) term
+    Lmat = jnp.exp(_segsum(dA_hc))                 # (b,H,nc,Q,Q)
+    scores = jnp.einsum("bclhn,bcshn->bhcls", Cc, Bc)
+    y_diag = jnp.einsum("bhcls,bhcls,bcshp,bcsh->bclhp",
+                        scores, Lmat, xc, dtc)
+
+    # 2) chunk states: contribution of each chunk to its final state
+    decay_states = jnp.exp(dA_cs[..., -1:] - dA_cs)      # (b,H,nc,Q)
+    states = jnp.einsum("bcshn,bhcs,bcsh,bcshp->bchpn",
+                        Bc, decay_states, dtc, xc)       # (b,nc,H,P,N)
+    states = states.astype(jnp.float32)                  # recurrence in f32
+
+    # 3) inter-chunk recurrence over chunk-final states
+    chunk_decay = dA_cs[..., -1].astype(jnp.float32)      # (b,H,nc)
+    if init_state is None:
+        init_state = jnp.zeros((b, H, P, N), jnp.float32)
+    init_state = init_state.astype(jnp.float32)
+
+    def scan_fn(carry, inp):
+        st, dec = inp                                     # (b,H,P,N),(b,H)
+        new = carry * jnp.exp(dec)[..., None, None] + st
+        return new, carry                                 # emit state BEFORE
+
+    sts = jnp.moveaxis(states, 1, 0)                      # (nc,b,H,P,N)
+    decs = jnp.moveaxis(chunk_decay, -1, 0)               # (nc,b,H)
+    final, prev_states = jax.lax.scan(scan_fn, init_state, (sts, decs))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)         # (b,nc,H,P,N)
+
+    # 4) inter-chunk output term: carry-in state read by each position
+    state_decay = jnp.exp(dA_cs)                          # (b,H,nc,Q)
+    y_off = jnp.einsum("bclhn,bchpn,bhcl->bclhp",
+                       Cc, prev_states, state_decay)
+
+    y = (y_diag + y_off).reshape(b, S, H, P).astype(x.dtype)
+    return y, final
+
+
+def ssd_decode_step(state, x, dt, A, B, C):
+    """Single-token recurrence: state' = state*exp(dt*A) + dt * B (x) outer;
+    y = C . state' + skip handled by caller.  x (B,H,P), dt (B,H),
+    B/C (B,G,N)."""
+    b, H, P = x.shape
+    G, N = B.shape[1], B.shape[2]
+    rep = H // G
+    Bh = jnp.repeat(B, rep, axis=1) if rep > 1 else B    # (b,H,N)
+    Ch = jnp.repeat(C, rep, axis=1) if rep > 1 else C
+    dA = jnp.exp(dt * A[None, :])                        # (b,H)
+    upd = jnp.einsum("bh,bhp,bhn->bhpn", dt, x, Bh)
+    new_state = state * dA[..., None, None] + upd
+    y = jnp.einsum("bhn,bhpn->bhp", Ch, new_state)
+    return y, new_state
+
+
+# --------------------------------------------------------------------------
+# full mamba2 block
+# --------------------------------------------------------------------------
+
+def _split_proj(cfg: ModelConfig, zxbcdt):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    G, N = s.n_groups, s.d_state
+    H = d_in // s.head_dim
+    z, xi, Bf, Cf, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + G * N, 2 * d_in + 2 * G * N],
+        axis=-1)
+    return z, xi, Bf, Cf, dt
+
+
+def mamba2_block(p: dict, h: jax.Array, cfg: ModelConfig,
+                 conv_state=None, ssm_state=None):
+    """One mamba2 mixer. Train/prefill: conv via sliding window; decode:
+    single-step with cached conv tail + state.  Returns (out, new_caches)."""
+    s = cfg.ssm
+    B_, S, D = h.shape
+    d_in = s.expand * D
+    G, N = s.n_groups, s.d_state
+    H = d_in // s.head_dim
+
+    zxbcdt = jnp.einsum("bsd,dp->bsp", h, p["in_proj"])
+    z, xi, Bf, Cf, dt = _split_proj(cfg, zxbcdt)
+    dt = jax.nn.softplus(dt + p["dt_bias"])
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+
+    conv_in = jnp.concatenate([xi, Bf, Cf], axis=-1)     # (B,S,conv_ch)
+    new_conv_state = None
+    if conv_state is not None:
+        # decode: cached last (d_conv-1) inputs
+        window = jnp.concatenate([conv_state, conv_in], axis=1)
+        new_conv_state = window[:, -(s.d_conv - 1):]
+        conv = jnp.einsum("bwc,wc->bc", window[:, -s.d_conv:],
+                          p["conv_w"]) + p["conv_b"]
+        conv = conv[:, None, :]
+    else:
+        pad = jnp.pad(conv_in, ((0, 0), (s.d_conv - 1, 0), (0, 0)))
+        windows = jnp.stack(
+            [pad[:, i:i + S] for i in range(s.d_conv)], axis=2)  # (B,S,W,C)
+        conv = jnp.einsum("bswc,wc->bsc", windows, p["conv_w"]) + p["conv_b"]
+    conv = jax.nn.silu(conv)
+    xi = conv[..., :d_in]
+    Bf = conv[..., d_in:d_in + G * N]
+    Cf = conv[..., d_in + G * N:]
+
+    xh = xi.reshape(B_, -1, H, s.head_dim)
+    Bg = Bf.reshape(B_, -1, G, N)
+    Cg = Cf.reshape(B_, -1, G, N)
+
+    new_ssm_state = None
+    if ssm_state is not None:
+        y, new_ssm_state = ssd_decode_step(
+            ssm_state.astype(jnp.float32), xh[:, 0], dt[:, 0], A,
+            Bg[:, 0], Cg[:, 0])
+        y = y[:, None].astype(h.dtype)
+        # cache dtype is stable across steps (f32 leaf, see kvcache)
+        new_ssm_state = new_ssm_state.astype(ssm_state.dtype)
+    else:
+        y, final = ssd_chunked(xh, dt, A, Bg, Cg, chunk=min(s.chunk, S))
+        new_ssm_state = final
+    y = y + xh * p["d_skip"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(B_, -1, d_in)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_w"])
+    out = jnp.einsum("bsp,pd->bsd", y, p["out_proj"]).astype(h.dtype)
+    return out, (new_conv_state, new_ssm_state)

@@ -1,0 +1,159 @@
+"""Sharding rules: logical param/activation axes -> mesh axes.
+
+The model schemas (``models/*.py``) tag every tensor dimension with a
+logical axis name; this module maps those names onto mesh axes and builds
+``NamedSharding`` trees.  One rule table covers every architecture:
+
+  vocab / heads / kv_heads / mlp / experts / ssm_inner  -> "model"   (TP/EP)
+  embed                                                 -> "data"    (FSDP)
+  batch                                                 -> ("pod", "data")
+  cache_seq                                             -> "model"   (decode)
+
+A dimension is only sharded if its size divides the mesh-axis size —
+otherwise it silently falls back to replication (GSPMD padding wastes real
+HBM; better to replicate a 9-head dimension than pad it to 16).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.layers import ParamDef
+
+# logical axis -> mesh axis (or tuple of mesh axes)
+DEFAULT_RULES: dict[str, object] = {
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "experts": "model",
+    "ssm_inner": "model",
+    "embed": "data",          # FSDP: weights gathered per layer inside scan
+    "lora": None,
+    "layers": None,
+    "batch": ("pod", "data"),
+    "seq": None,
+    "act_embed": None,
+    "cache_seq": "model",
+    "cache_heads": None,
+    "vis_seq": None,
+}
+
+# pure-FSDP layout: no tensor parallelism — batch over every mesh axis,
+# weights fully sharded on their embed dim and gathered per layer inside the
+# scan.  The right configuration for archs whose head/ff dims divide the
+# model axis poorly (smollm 9 heads, minicpm 40 heads, starcoder 36): TP
+# would replicate their attention compute up to 16x.  §Perf layout knob.
+FSDP_RULES: dict[str, object] = {
+    **DEFAULT_RULES,
+    "vocab": None,
+    "heads": None,
+    "kv_heads": None,
+    "mlp": None,
+    "experts": None,
+    "ssm_inner": None,
+    "embed": ("data", "model"),
+    "batch": ("pod", "data", "model"),
+    "cache_seq": None,
+}
+
+LAYOUTS = {"tp": DEFAULT_RULES, "fsdp": FSDP_RULES}
+
+
+@dataclasses.dataclass
+class ShardingCtx:
+    """Mesh + rules + helpers. ``mesh=None`` => single-device (tests)."""
+
+    mesh: Optional[Mesh] = None
+    rules: dict = dataclasses.field(default_factory=lambda: dict(DEFAULT_RULES))
+    moe_impl: str = "replicated"   # replicated | alltoall | auto
+    remat: bool = True
+    # logical axes allowed to shard with GSPMD padding when the dim does
+    # not divide the mesh axis (e.g. 40 heads over 16 shards -> pad to 48:
+    # 20% pad beats 1500% replicated compute).  §Perf knob.
+    pad_shard_axes: tuple = ()
+    # decode attention over a model-sharded KV cache via shard_map
+    # flash-decoding (partial softmax + psum combine).  §Perf knob.
+    flash_decode: bool = False
+
+    # ------------------------------------------------------------ axis math
+    def _axis_size(self, mesh_axes) -> int:
+        if self.mesh is None:
+            return 1
+        if isinstance(mesh_axes, str):
+            return self.mesh.shape[mesh_axes]
+        return int(np.prod([self.mesh.shape[a] for a in mesh_axes]))
+
+    def spec_for(self, axes: tuple, shape: tuple | None = None) -> P:
+        """Logical axes tuple -> PartitionSpec (with divisibility checks)."""
+        parts = []
+        used: set = set()
+        for i, ax in enumerate(axes):
+            mesh_axes = self.rules.get(ax) if ax else None
+            if mesh_axes is None:
+                parts.append(None)
+                continue
+            flat = (mesh_axes,) if isinstance(mesh_axes, str) else tuple(mesh_axes)
+            if self.mesh is not None:
+                # drop axes absent from this mesh (e.g. "pod" on single-pod)
+                flat = tuple(a for a in flat if a in self.mesh.shape)
+            if not flat or any(a in used for a in flat):
+                parts.append(None)  # a mesh axis may appear only once
+                continue
+            mesh_axes = flat[0] if len(flat) == 1 else flat
+            if self.mesh is not None and shape is not None:
+                sz = self._axis_size(mesh_axes)
+                if shape[i] % sz != 0:
+                    # padded sharding only where opted-in and dim >= axis
+                    if not (ax in self.pad_shard_axes and shape[i] >= sz):
+                        parts.append(None)
+                        continue
+            parts.append(mesh_axes)
+            used.update(flat)
+        while parts and parts[-1] is None:
+            parts.pop()
+        return P(*parts)
+
+    def sharding_for(self, axes: tuple, shape: tuple | None = None):
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec_for(axes, shape))
+
+    # ------------------------------------------------------------ trees
+    def param_shardings(self, schema):
+        """Schema tree -> NamedSharding tree (or None tree w/o mesh)."""
+        return jax.tree.map(
+            lambda d: self.sharding_for(d.axes, d.shape),
+            schema, is_leaf=lambda x: isinstance(x, ParamDef))
+
+    def param_specs(self, schema):
+        return jax.tree.map(
+            lambda d: self.spec_for(d.axes, d.shape),
+            schema, is_leaf=lambda x: isinstance(x, ParamDef))
+
+    # ------------------------------------------------------------ act utils
+    def constrain(self, x, *axes):
+        """with_sharding_constraint on activations (no-op without mesh)."""
+        if self.mesh is None:
+            return x
+        spec = self.spec_for(axes, x.shape)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+    @property
+    def model_axis_size(self) -> int:
+        if self.mesh is None or "model" not in self.mesh.shape:
+            return 1
+        return self.mesh.shape["model"]
+
+    def batch_axes(self) -> tuple:
+        """Mesh axes that shard the batch dim."""
+        r = self.rules.get("batch")
+        if r is None or self.mesh is None:
+            return ()
+        flat = (r,) if isinstance(r, str) else tuple(r)
+        return tuple(a for a in flat if a in self.mesh.shape)

@@ -1,0 +1,240 @@
+"""Single-token decode step for every architecture family.
+
+``decode_step(cfg, params, caches, tokens, pos, ...)`` consumes a (B, 1)
+token batch plus the cache tree and returns (logits (B,1,V), new caches).
+Layer stacks are scanned with the caches as scan inputs/outputs, so the
+compiled decode HLO is O(1) in depth like the forward pass.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import rmsnorm
+from repro.models.model import (NULL_CTX, _attn_apply, _ffn_apply,
+                                _hybrid_split, _mamba_layer, _rope,
+                                _vlm_split)
+from repro.models import ssm as ssm_mod
+from repro.parallel.sharding import ShardingCtx
+
+
+def _cache_tuple(c: dict):
+    if "ckv" in c:
+        return c["ckv"]
+    return (c["k"], c["v"])
+
+
+def _retuple(c, new):
+    if "ckv" in c:
+        return {"ckv": new}
+    return {"k": new[0], "v": new[1]}
+
+
+def _dense_decode_scan(cfg, params, caches, h, cos, sin, pos, ctx):
+    def body(carry, xs):
+        p, c = xs
+        cache = _cache_tuple(c)
+        a, new = _attn_apply(p, rmsnorm(carry, p["ln1"]), cfg, cos, sin, ctx,
+                             cache=cache, pos=pos)
+        carry = carry + a
+        carry = carry + _ffn_apply(p, rmsnorm(carry, p["ln2"]), cfg, ctx)
+        return carry, _retuple(c, new)
+
+    return jax.lax.scan(body, h, (params, caches))
+
+
+def _mamba_decode_scan(cfg, params, caches, h):
+    def body(carry, xs):
+        p, c = xs
+        out, (conv, state) = _mamba_layer(p, carry, cfg,
+                                          conv_state=c["conv"],
+                                          ssm_state=c["state"])
+        return out, {"conv": conv, "state": state}
+
+    return jax.lax.scan(body, h, (params, caches))
+
+
+def decode_step(cfg: ModelConfig, params, caches, tokens, pos,
+                ctx: ShardingCtx = NULL_CTX, extras: dict | None = None):
+    """One token for the whole batch.  ``pos``: scalar int32 write position.
+
+    ``extras``: family-specific frozen inputs (encdec: none needed once the
+    cross cache is built; vlm: none — vision K/V live in the cache)."""
+    B, S1 = tokens.shape
+    h = jnp.take(params["tok_emb"], tokens, axis=0)
+    h = ctx.constrain(h, "batch", None, "act_embed")
+    # rope table for max cache length, sliced at pos
+    fam = cfg.family
+    max_seq = _max_cache_len(caches, cfg)
+    cos_full, sin_full = _rope(cfg, max_seq)
+    cos = jax.lax.dynamic_slice_in_dim(cos_full, pos, S1, axis=0)
+    sin = jax.lax.dynamic_slice_in_dim(sin_full, pos, S1, axis=0)
+
+    new_caches = dict(caches)
+    if fam in ("dense", "moe"):
+        if "dense0" in params:
+            h, nc0 = _dense_decode_scan(cfg, params["dense0"],
+                                        caches["dense0"], h, cos, sin, pos,
+                                        ctx)
+            new_caches["dense0"] = nc0
+        h, nc = _dense_decode_scan(cfg, params["blocks"], caches["blocks"],
+                                   h, cos, sin, pos, ctx)
+        new_caches["blocks"] = nc
+
+    elif fam == "ssm":
+        h, nc = _mamba_decode_scan(cfg, params["blocks"], caches["blocks"], h)
+        new_caches["blocks"] = nc
+
+    elif fam == "hybrid":
+        G, k, trail = _hybrid_split(cfg)
+        mparams = jax.tree.map(
+            lambda a: a.reshape((G, k) + a.shape[1:]), params["blocks"])
+        mcaches = jax.tree.map(
+            lambda a: a.reshape((G, k) + a.shape[1:]), caches["blocks"])
+
+        def group_body(carry, xs):
+            pg, cg, csh = xs
+
+            def inner(c2, xs2):
+                p, c = xs2
+                out, (conv, state) = _mamba_layer(
+                    p, c2, cfg, conv_state=c["conv"], ssm_state=c["state"])
+                return out, {"conv": conv, "state": state}
+            c2, ncm = jax.lax.scan(inner, carry, (pg, cg))
+            p1 = jax.tree.map(lambda a: a[0], params["shared"])
+            cache = _cache_tuple(csh)
+            a, new = _attn_apply(p1, rmsnorm(c2, p1["ln1"]), cfg, cos, sin,
+                                 ctx, cache=cache, pos=pos)
+            c2 = c2 + a
+            c2 = c2 + _ffn_apply(p1, rmsnorm(c2, p1["ln2"]), cfg, ctx)
+            return c2, (ncm, _retuple(csh, new))
+
+        h, (ncm, ncs) = jax.lax.scan(group_body, h,
+                                     (mparams, mcaches, caches["shared"]))
+        new_caches["blocks"] = jax.tree.map(
+            lambda a: a.reshape((G * k,) + a.shape[2:]), ncm)
+        new_caches["shared"] = ncs
+        if trail:
+            h, nct = _mamba_decode_scan(cfg, params["trailing"],
+                                        caches["trailing"], h)
+            new_caches["trailing"] = nct
+
+    elif fam == "vlm":
+        G, k = _vlm_split(cfg)
+        bparams = jax.tree.map(
+            lambda a: a.reshape((G, k) + a.shape[1:]), params["blocks"])
+        bcaches = jax.tree.map(
+            lambda a: a.reshape((G, k) + a.shape[1:]), caches["blocks"])
+
+        def group_body(carry, xs):
+            pg, cg, pc, cc = xs
+
+            def inner(c2, xs2):
+                p, c = xs2
+                cache = _cache_tuple(c)
+                a, new = _attn_apply(p, rmsnorm(c2, p["ln1"]), cfg, cos, sin,
+                                     ctx, cache=cache, pos=pos)
+                c2 = c2 + a
+                c2 = c2 + _ffn_apply(p, rmsnorm(c2, p["ln2"]), cfg, ctx)
+                return c2, _retuple(c, new)
+            c2, ncb = jax.lax.scan(inner, carry, (pg, cg))
+            # cross-attention reads the frozen vision K/V cache
+            a, _ = _cross_from_cache(pc, rmsnorm(c2, pc["ln1"]), cc, cfg)
+            c2 = c2 + a
+            c2 = c2 + _ffn_apply(pc, rmsnorm(c2, pc["ln2"]), cfg, ctx)
+            return c2, ncb
+
+        h, ncb = jax.lax.scan(group_body, h,
+                              (bparams, bcaches, params["cross"],
+                               caches["cross"]))
+        new_caches["blocks"] = jax.tree.map(
+            lambda a: a.reshape((G * k,) + a.shape[2:]), ncb)
+
+    elif fam == "encdec":
+        def body(carry, xs):
+            p, cs, cc = xs
+            cache = _cache_tuple(cs)
+            a, new = _attn_apply(p["self"], rmsnorm(carry, p["ln1"]), cfg,
+                                 cos, sin, ctx, cache=cache, pos=pos)
+            carry = carry + a
+            a, _ = _cross_from_cache(p["cross"], rmsnorm(carry, p["ln2"]),
+                                     cc, cfg)
+            carry = carry + a
+            carry = carry + _ffn_apply(p, rmsnorm(carry, p["ln3"]), cfg, ctx)
+            return carry, _retuple(cs, new)
+
+        h, ncs = jax.lax.scan(body, h,
+                              (params["decoder"], caches["self"],
+                               caches["cross"]))
+        new_caches["self"] = ncs
+    else:
+        raise ValueError(fam)
+
+    h = rmsnorm(h, params["final_norm"])
+    unembed = params["tok_emb"] if cfg.tie_embeddings else params["unembed"]
+    logits = jnp.einsum("bsd,vd->bsv", h, unembed)
+    logits = ctx.constrain(logits, "batch", None, "vocab")
+    return logits, new_caches
+
+
+def _cross_from_cache(p, xq, kv_cache: dict, cfg: ModelConfig):
+    """Cross-attention against a frozen K/V cache (no rope, no causal).
+    ``xq`` must already be normalised by the caller's cross-attn norm."""
+    import math
+    q = jnp.einsum("bsd,dhk->bhsk", xq, p["wq"])
+    k, v = kv_cache["k"], kv_cache["v"]
+    groups = q.shape[1] // k.shape[1]
+    if groups > 1:
+        k = jnp.repeat(k, groups, axis=1)
+        v = jnp.repeat(v, groups, axis=1)
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    s = jnp.einsum("bhsk,bhtk->bhst", q, k).astype(jnp.float32) * scale
+    o = jnp.einsum("bhst,bhtk->bhsk",
+                   jax.nn.softmax(s, axis=-1).astype(v.dtype), v)
+    return jnp.einsum("bhsk,hkd->bsd", o, p["wo"]), None
+
+
+def _max_cache_len(caches, cfg: ModelConfig) -> int:
+    if cfg.family in ("dense", "moe"):
+        c = caches["blocks"]
+        return c["ckv"].shape[2] if "ckv" in c else c["k"].shape[3]
+    if cfg.family == "hybrid":
+        c = caches["shared"]
+        return c["ckv"].shape[2] if "ckv" in c else c["k"].shape[3]
+    if cfg.family == "vlm":
+        c = caches["blocks"]
+        return c["k"].shape[3] if "k" in c else c["ckv"].shape[2]
+    if cfg.family == "encdec":
+        c = caches["self"]
+        return c["ckv"].shape[2] if "ckv" in c else c["k"].shape[3]
+    return 1  # ssm: position-free
+
+
+def encode(cfg: ModelConfig, params, enc_embed: jax.Array,
+           ctx: ShardingCtx = NULL_CTX) -> jax.Array:
+    """Run the encoder stack (encdec family) over frame embeddings."""
+    from repro.models.layers import mlp
+    from repro.models.model import _rope as rope_fn
+    cos_e, sin_e = rope_fn(cfg, enc_embed.shape[1])
+
+    def enc_body(carry, p):
+        a, _ = _attn_apply(p, rmsnorm(carry, p["ln1"]), cfg, cos_e, sin_e,
+                           ctx, causal=False)
+        c = carry + a
+        c = c + mlp(p, rmsnorm(c, p["ln2"]), cfg.act)
+        return c, None
+
+    enc, _ = jax.lax.scan(enc_body, enc_embed, params["encoder"])
+    return rmsnorm(enc, params["enc_norm"])
+
+
+def prefill_cross_cache(cfg: ModelConfig, params, src: jax.Array,
+                        which: str = "cross"):
+    """Build the frozen cross-attention K/V cache from source embeddings
+    (encoder output or vision patches): (L_or_G, B, Hkv, S_src, Dh)."""
+    p = params["cross"] if which == "cross" and "cross" in params \
+        else params["decoder"]["cross"]
+    k = jnp.einsum("bsd,ldhk->lbhsk", src, p["wk"])
+    v = jnp.einsum("bsd,ldhk->lbhsk", src, p["wv"])
+    return {"k": k, "v": v}

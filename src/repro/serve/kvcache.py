@@ -1,0 +1,107 @@
+"""Decode caches for every architecture family.
+
+Cache schemas are ParamDef trees (same machinery as weights) so the
+dry-run can hand ShapeDtypeStructs to ``decode_step`` and the sharding
+rules apply uniformly:
+
+  GQA      k/v       (L, B, Hkv, S_max, Dh)    cache_seq -> model
+  MLA      latent    (L, B, S_max, lora+rope)  cache_seq -> model
+  SSM      conv      (L, B, d_conv-1, C) ; state (L, B, H, P, N)
+  hybrid   mamba caches + shared-block KV per application (G, B, ...)
+  encdec   decoder self KV + frozen cross K/V over the source
+  vlm      self KV + frozen cross K/V over the vision tokens
+
+The SSM/hybrid caches are O(1) in sequence length — that is why only these
+families run the long_500k cell (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ParamDef
+from repro.models.model import _hybrid_split, _vlm_split
+
+
+def _gqa_kv(cfg: ModelConfig, L: int, B: int, S: int) -> dict:
+    hd = cfg.head_dim_
+    shp = (L, B, cfg.n_kv_heads, S, hd)
+    axes = ("layers", "batch", "cache_heads", "cache_seq", None)
+    return {"k": ParamDef(shp, axes, init="zeros"),
+            "v": ParamDef(shp, axes, init="zeros")}
+
+
+def _mla_latent(cfg: ModelConfig, L: int, B: int, S: int) -> dict:
+    m = cfg.mla
+    shp = (L, B, S, m.kv_lora_rank + m.qk_rope_head_dim)
+    return {"ckv": ParamDef(shp, ("layers", "batch", "cache_seq", None),
+                            init="zeros")}
+
+
+def _attn_cache(cfg: ModelConfig, L: int, B: int, S: int) -> dict:
+    if cfg.attn_type == "mla":
+        return _mla_latent(cfg, L, B, S)
+    return _gqa_kv(cfg, L, B, S)
+
+
+def _ssm_cache(cfg: ModelConfig, L: int, B: int) -> dict:
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    H = d_in // s.head_dim
+    conv_ch = d_in + 2 * s.n_groups * s.d_state
+    return {
+        "conv": ParamDef((L, B, s.d_conv - 1, conv_ch),
+                         ("layers", "batch", None, "ssm_inner"),
+                         init="zeros"),
+        "state": ParamDef((L, B, H, s.head_dim, s.d_state),
+                          ("layers", "batch", "heads", None, None),
+                          init="zeros", dtype=jnp.float32),
+    }
+
+
+def cache_schema(cfg: ModelConfig, batch: int, max_seq: int,
+                 src_len: int | None = None) -> dict:
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        sch = {}
+        if fam == "moe" and cfg.moe and cfg.moe.first_dense:
+            sch["dense0"] = _attn_cache(cfg, cfg.moe.first_dense, batch, max_seq)
+            sch["blocks"] = _attn_cache(cfg, cfg.n_layers - cfg.moe.first_dense,
+                                        batch, max_seq)
+        else:
+            sch["blocks"] = _attn_cache(cfg, cfg.n_layers, batch, max_seq)
+        return sch
+    if fam == "ssm":
+        return {"blocks": _ssm_cache(cfg, cfg.n_layers, batch)}
+    if fam == "hybrid":
+        G, k, trail = _hybrid_split(cfg)
+        sch = {"blocks": _ssm_cache(cfg, G * k, batch),
+               "shared": _attn_cache(cfg, G, batch, max_seq)}
+        if trail:
+            sch["trailing"] = _ssm_cache(cfg, trail, batch)
+        return sch
+    if fam == "vlm":
+        G, k = _vlm_split(cfg)
+        return {"blocks": _attn_cache(cfg, G * k, batch, max_seq),
+                "cross": _gqa_kv(cfg, G, batch, cfg.n_vision_tokens)}
+    if fam == "encdec":
+        L = cfg.n_layers
+        return {"self": _attn_cache(cfg, L, batch, max_seq),
+                "cross": _gqa_kv(cfg, L, batch, src_len or max_seq)}
+    raise ValueError(fam)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               dtype=jnp.float32, src_len: int | None = None):
+    sch = cache_schema(cfg, batch, max_seq, src_len=src_len)
+    return jax.tree.map(lambda d: jnp.zeros(d.shape, d.dtype or dtype), sch,
+                        is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_seq: int,
+                   dtype=jnp.bfloat16, src_len: int | None = None):
+    sch = cache_schema(cfg, batch, max_seq, src_len=src_len)
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype or dtype), sch,
+        is_leaf=lambda x: isinstance(x, ParamDef))

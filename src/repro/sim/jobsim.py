@@ -1,0 +1,41 @@
+"""Single-job simulation: completion time + abort decision for one instance."""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.sim.network import TorusNetwork
+from repro.workloads.patterns import Workload
+
+
+@dataclasses.dataclass
+class JobOutcome:
+    completed: bool
+    time: float                # successful runtime (time charged on abort too)
+    aborted_by: np.ndarray     # failed nodes that killed it (empty if ok)
+
+
+def successful_runtime(wl: Workload, placement: np.ndarray,
+                       net: TorusNetwork) -> float:
+    """Runtime with no failures: compute + communication (no overlap — the
+    conservative model; overlap is a serving-framework concern, not the
+    placement paper's)."""
+    return net.compute_time(wl.flops_per_rank, wl.rounds) \
+        + net.comm_time(wl.comm, placement)
+
+
+def simulate_instance(
+    wl: Workload,
+    placement: np.ndarray,
+    net: TorusNetwork,
+    failed: np.ndarray,
+    runtime: float | None = None,
+) -> JobOutcome:
+    """One scenario: if any failed node is an endpoint or on a used route,
+    the MPI job aborts (paper fault model: failed nodes neither compute nor
+    forward; communication errors abort the job)."""
+    t = successful_runtime(wl, placement, net) if runtime is None else runtime
+    if len(failed) and net.touches_failed(wl.comm, placement, failed):
+        return JobOutcome(False, t, np.asarray(failed))
+    return JobOutcome(True, t, np.array([], dtype=np.int64))

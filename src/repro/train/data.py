@@ -1,0 +1,77 @@
+"""Deterministic synthetic data pipeline.
+
+Generates reproducible token streams (seeded per step, host-sliceable for
+multi-process data loading) with enough structure that the loss actually
+falls: a k-gram Markov chain over the vocabulary, so next-token prediction
+is learnable.  ``input_specs`` builds the ShapeDtypeStruct stand-ins used by
+the dry-run for every (arch x shape) cell.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+@dataclasses.dataclass
+class SyntheticDataset:
+    """Markov-chain token stream; next token = f(prev token) + noise."""
+
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    noise: float = 0.1
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        # deterministic successor table: makes sequences predictable
+        self._succ = rng.permutation(self.vocab)
+
+    def batch(self, step: int) -> dict:
+        rng = np.random.default_rng((self.seed, step))
+        B, S = self.global_batch, self.seq_len
+        toks = np.empty((B, S + 1), np.int32)
+        toks[:, 0] = rng.integers(0, self.vocab, B)
+        noise_mask = rng.random((B, S)) < self.noise
+        noise_tok = rng.integers(0, self.vocab, (B, S))
+        for t in range(S):
+            nxt = self._succ[toks[:, t]]
+            toks[:, t + 1] = np.where(noise_mask[:, t], noise_tok[:, t], nxt)
+        return {"tokens": jnp.asarray(toks[:, :-1]),
+                "labels": jnp.asarray(toks[:, 1:])}
+
+
+def extra_inputs(cfg: ModelConfig, batch_size: int, dtype=jnp.float32,
+                 abstract: bool = False, seq_len: int | None = None) -> dict:
+    """Modality-frontend STUBS (assignment): precomputed patch / frame
+    embeddings for [vlm] / [audio] archs."""
+    out = {}
+    if cfg.family == "vlm":
+        shp = (batch_size, cfg.n_vision_tokens, cfg.d_model)
+        out["vision_embed"] = (jax.ShapeDtypeStruct(shp, dtype) if abstract
+                               else jnp.zeros(shp, dtype))
+    if cfg.family == "encdec":
+        # speech frames scale with the text length when not pinned
+        src = cfg.n_audio_frames or seq_len or 512
+        shp = (batch_size, src, cfg.d_model)
+        out["enc_embed"] = (jax.ShapeDtypeStruct(shp, dtype) if abstract
+                            else jnp.zeros(shp, dtype))
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                dtype=jnp.bfloat16) -> dict:
+    """ShapeDtypeStruct stand-ins for one (arch x shape) dry-run cell
+    (train/prefill kinds; decode cells add caches via serve.kvcache)."""
+    B, S = shape.global_batch, shape.seq_len
+    toks = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    batch = {"tokens": toks}
+    if shape.kind == "train":
+        batch["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    batch.update(extra_inputs(cfg, B, dtype=dtype, abstract=True, seq_len=S))
+    return batch

@@ -1,0 +1,71 @@
+"""AdamW in plain JAX pytrees (no optax dependency), with ZeRO-style
+sharded optimizer state: m/v inherit each parameter's sharding, so state
+memory divides across the same axes the parameter does.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    state_dtype: Any = jnp.float32   # bf16 halves optimizer HBM (§Perf knob)
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda p: jnp.zeros(p.shape, self.state_dtype)
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          m=jax.tree.map(zeros, params),
+                          v=jax.tree.map(zeros, params))
+
+    def _schedule(self, step):
+        warm = jnp.minimum(step / max(self.warmup_steps, 1), 1.0)
+        return self.lr * warm
+
+    def update(self, grads, state: AdamWState, params):
+        # global-norm clip
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(grads)))
+        scale = jnp.minimum(1.0, self.grad_clip / (gnorm + 1e-9))
+        step = state.step + 1
+        lr = self._schedule(step)
+        b1c = 1 - self.b1 ** step.astype(jnp.float32)
+        b2c = 1 - self.b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32) * scale
+            m_new = self.b1 * m.astype(jnp.float32) + (1 - self.b1) * g
+            v_new = self.b2 * v.astype(jnp.float32) + (1 - self.b2) * g * g
+            mh = m_new / b1c
+            vh = v_new / b2c
+            delta = mh / (jnp.sqrt(vh) + self.eps) \
+                + self.weight_decay * p.astype(jnp.float32)
+            p_new = p.astype(jnp.float32) - lr * delta
+            return (p_new.astype(p.dtype), m_new.astype(self.state_dtype),
+                    v_new.astype(self.state_dtype))
+
+        out = jax.tree.map(upd, params, grads, state.m, state.v)
+        p_new = jax.tree.map(lambda t: t[0], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        m_new = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        v_new = jax.tree.map(lambda t: t[2], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return p_new, AdamWState(step=step, m=m_new, v=v_new), gnorm

@@ -1,0 +1,69 @@
+"""Loss and train step (grad + AdamW update), microbatch accumulation."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import NULL_CTX, forward
+from repro.parallel.sharding import ShardingCtx
+from repro.train.optimizer import AdamW, AdamWState
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean token NLL; computed in f32 over the (possibly vocab-sharded)
+    logits — GSPMD turns the logsumexp into a psum over the vocab axis."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return (lse - ll).mean()
+
+
+def loss_fn(cfg: ModelConfig, params, batch: dict,
+            ctx: ShardingCtx = NULL_CTX) -> jax.Array:
+    logits = forward(cfg, params, batch, ctx)
+    return cross_entropy(logits, batch["labels"])
+
+
+def make_train_step(cfg: ModelConfig, opt: AdamW,
+                    ctx: ShardingCtx = NULL_CTX,
+                    microbatches: int = 1):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics).  ``microbatches > 1`` accumulates gradients over a scan of
+    batch slices (activation memory / global-batch decoupling)."""
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch, ctx))(params)
+
+    def train_step(params, opt_state: AdamWState, batch: dict):
+        if microbatches == 1:
+            loss, grads = grads_of(params, batch)
+        else:
+            def slice_mb(x, i):
+                mb = x.shape[0] // microbatches
+                return jax.lax.dynamic_slice_in_dim(x, i * mb, mb, axis=0)
+
+            def acc_body(carry, i):
+                acc, loss_acc = carry
+                mb = {k: slice_mb(v, i) for k, v in batch.items()}
+                l, g = grads_of(params, mb)
+                acc = jax.tree.map(jnp.add, acc, g)
+                return (acc, loss_acc + l), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(
+                acc_body, (zeros, jnp.zeros((), jnp.float32)),
+                jnp.arange(microbatches))
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            loss = lsum / microbatches
+        new_params, new_state, gnorm = opt.update(grads, opt_state, params)
+        metrics = {"loss": loss, "grad_norm": gnorm,
+                   "step": new_state.step}
+        return new_params, new_state, metrics
+
+    return train_step

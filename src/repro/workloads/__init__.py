@@ -1,0 +1,1 @@
+from repro.workloads.patterns import (WORKLOADS, Workload, get_workload)

@@ -1,0 +1,106 @@
+import numpy as np
+import pytest
+
+from repro.cluster.failures import BernoulliPerJob, NoFailures, WeibullArrival
+from repro.cluster.heartbeat import EWMA, HeartbeatMonitor, MovingAverage
+from repro.cluster.nodes import NodeRegistry, NodeState
+from repro.cluster.scheduler import Job, Scheduler
+from repro.core.topology import TorusTopology
+from repro.workloads.patterns import lammps_like
+
+
+def test_registry_topology_file_roundtrip():
+    t = TorusTopology((4, 4))
+    reg = NodeRegistry(t)
+    text = reg.topology_file()
+    reg2 = NodeRegistry.from_topology_file(text, (4, 4))
+    assert len(reg2) == 16
+
+
+def test_heartbeat_moving_average_converges():
+    rng = np.random.default_rng(0)
+    mon = HeartbeatMonitor(8, MovingAverage(window=200))
+    true_p = np.zeros(8)
+    true_p[3] = 0.3
+    mon.simulate_rounds(rng, true_p, 400)
+    est = mon.outage_probabilities()
+    assert est[3] == pytest.approx(0.3, abs=0.08)
+    assert est[0] == 0.0
+
+
+def test_heartbeat_ewma_reacts_to_state_change():
+    mon = HeartbeatMonitor(2, EWMA(alpha=0.2))
+    rng = np.random.default_rng(1)
+    mon.simulate_rounds(rng, np.array([0.0, 0.0]), 50)
+    assert mon.outage_probabilities()[1] == 0.0
+    mon.simulate_rounds(rng, np.array([0.0, 1.0]), 20)  # node 1 dies
+    est = mon.outage_probabilities()
+    assert est[1] > 0.9 and est[0] == 0.0
+
+
+def test_straggler_scores_from_latency():
+    mon = HeartbeatMonitor(3)
+    rng = np.random.default_rng(2)
+    slow = np.array([0.0, 2.0, 0.0])
+    mon.simulate_rounds(rng, np.zeros(3), 30, slowdown=slow)
+    s = mon.straggler_scores()
+    assert s[1] == pytest.approx(2.0, rel=0.2)
+    assert s[0] == pytest.approx(0.0, abs=0.1)
+
+
+def test_bernoulli_failure_model_rate():
+    rng = np.random.default_rng(3)
+    fm = BernoulliPerJob(np.arange(16), 0.02)
+    hits = [len(fm.sample_failed(rng, 1.0)) for _ in range(4000)]
+    assert np.mean(hits) == pytest.approx(16 * 0.02, rel=0.15)
+    assert fm.outage_vector(64)[:16].sum() == pytest.approx(16 * 0.02)
+    assert fm.outage_vector(64)[16:].sum() == 0
+
+
+def test_no_failures():
+    assert len(NoFailures().sample_failed(np.random.default_rng(0), 1.0)) == 0
+
+
+def test_weibull_scales_with_duration():
+    rng = np.random.default_rng(4)
+    fm = WeibullArrival(np.arange(32), mtbf=1000.0, shape=1.0)
+    short = np.mean([len(fm.sample_failed(rng, 1.0)) for _ in range(2000)])
+    long = np.mean([len(fm.sample_failed(rng, 100.0)) for _ in range(2000)])
+    assert long > 10 * short
+
+
+def test_scheduler_drains_flapping_node():
+    t = TorusTopology((4, 4))
+    sch = Scheduler(t, drain_threshold=0.5)
+    replies_bad = np.ones(16, dtype=bool)
+    replies_bad[5] = False
+    for _ in range(20):
+        sch.heartbeat_round(replies_bad)
+    assert sch.registry[5].state == NodeState.DRAINED
+    assert sch.estimated_outage()[5] == 1.0
+
+
+def test_scheduler_tofa_avoids_drained_node():
+    t = TorusTopology((4, 4))
+    sch = Scheduler(t)
+    bad = np.ones(16, dtype=bool)
+    bad[0] = False
+    for _ in range(30):
+        sch.heartbeat_round(bad)
+    rec = sch.submit(Job(lammps_like(8), distribution="tofa"))
+    assert 0 not in set(rec.placement.placement.tolist())
+    assert rec.runtime > 0
+
+
+def test_scheduler_elastic_replacement():
+    t = TorusTopology((4, 4))
+    sch = Scheduler(t)
+    sch.heartbeat_round(np.ones(16, dtype=bool))
+    rec = sch.submit(Job(lammps_like(6), distribution="linear"))
+    victim = int(rec.placement.placement[0])
+    replaced = sch.handle_node_failure([victim])
+    assert rec in replaced
+    assert rec.restarts == 1
+    assert victim not in set(rec.placement.placement.tolist())
+    sch.complete(rec.job.job_id)
+    assert sch.records[rec.job.job_id].state == "done"

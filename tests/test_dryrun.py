@@ -1,0 +1,48 @@
+"""Dry-run integration test: one real (arch x shape x mesh) cell through
+the production launcher in a subprocess (512 host-emulated devices)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.parametrize("arch,shape,extra", [
+    ("smollm-135m", "decode_32k", []),
+    ("mamba2-2.7b", "long_500k", []),
+])
+def test_dryrun_cell_compiles(arch, shape, extra, tmp_path):
+    out = tmp_path / "cell.jsonl"
+    env = {**os.environ, "PYTHONPATH": os.path.join(ROOT, "src")}
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--shape", shape, "--out", str(out), *extra],
+        capture_output=True, text=True, env=env, cwd=ROOT, timeout=900)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    rows = [json.loads(l) for l in open(out)]
+    assert len(rows) == 1 and rows[0]["ok"]
+    row = rows[0]
+    assert row["devices"] == 256
+    assert row["compute_s"] >= 0 and row["memory_s"] > 0
+    assert row["dominant"] in ("compute", "memory", "collective")
+    assert row["fits_hbm"] in (True, False)
+    # placement analysis present with both policies
+    assert "placement" in row
+    assert {"linear", "tofa"} <= set(row["placement"])
+
+
+def test_dryrun_skips_dead_cells():
+    """Dead cells (long_500k x full-attention) are excluded by design."""
+    env = {**os.environ, "PYTHONPATH": os.path.join(ROOT, "src")}
+    r = subprocess.run(
+        [sys.executable, "-c",
+         "from repro.configs.base import shape_cells;"
+         "from repro.configs.registry import get_arch;"
+         "assert 'long_500k' not in shape_cells(get_arch('starcoder2-7b'));"
+         "assert 'long_500k' in shape_cells(get_arch('zamba2-7b'));"
+         "print('OK')"],
+        capture_output=True, text=True, env=env, cwd=ROOT, timeout=120)
+    assert "OK" in r.stdout

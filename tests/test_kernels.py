@@ -1,0 +1,182 @@
+"""Pallas kernel tests: interpret-mode execution vs pure-jnp oracles,
+shape/dtype sweeps + hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention.kernel import flash_attention_tpu
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.rmsnorm.kernel import rmsnorm_tpu
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+from repro.kernels.ssd_scan.kernel import ssd_scan_tpu
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+from repro.models.ssm import ssd_chunked
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+def _naive_attention(q, k, v, causal):
+    import math
+    H, Hkv = q.shape[1], k.shape[1]
+    if H != Hkv:
+        k = jnp.repeat(k, H // Hkv, axis=1)
+        v = jnp.repeat(v, H // Hkv, axis=1)
+    s = jnp.einsum("bhsk,bhtk->bhst", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(q.shape[-1])
+    if causal:
+        Sq, Sk = q.shape[2], k.shape[2]
+        qp = jnp.arange(Sq) + (Sk - Sq)
+        kp = jnp.arange(Sk)
+        s = jnp.where(kp[None, :] <= qp[:, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhst,bhtk->bhsk", p, v.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------- flash
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,Hkv,Sq,Sk,Dh,causal", [
+    (1, 2, 2, 64, 64, 32, True),
+    (2, 4, 2, 96, 96, 64, True),      # GQA + non-pow2 seq (padding)
+    (1, 4, 1, 32, 128, 64, True),     # decode-ish: Sq < Sk, MQA
+    (2, 2, 2, 64, 64, 128, False),    # non-causal (cross attention)
+    (1, 8, 4, 200, 200, 64, True),    # ragged tail
+])
+def test_flash_kernel_matches_ref(B, H, Hkv, Sq, Sk, Dh, causal, dtype):
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (B, H, Sq, Dh), dtype)
+    k = jax.random.normal(ks[1], (B, Hkv, Sk, Dh), dtype)
+    v = jax.random.normal(ks[2], (B, Hkv, Sk, Dh), dtype)
+    out_k = flash_attention_tpu(q, k, v, causal=causal, block_q=32,
+                                block_k=32, interpret=True)
+    out_r = flash_attention_ref(q, k, v, causal=causal, q_block=16,
+                                kv_block=32)
+    naive = _naive_attention(q, k, v, causal)
+    tol = TOL[dtype]
+    np.testing.assert_allclose(np.asarray(out_k, np.float32),
+                               np.asarray(naive), atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(out_r, np.float32),
+                               np.asarray(naive), atol=tol, rtol=tol)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    sq=st.integers(4, 80), dh=st.sampled_from([16, 32, 64]),
+    h=st.sampled_from([1, 2, 4]), seed=st.integers(0, 100),
+)
+def test_flash_kernel_property(sq, dh, h, seed):
+    """Any shape: kernel == oracle == naive within fp tolerance."""
+    ks = jax.random.split(jax.random.key(seed), 3)
+    q = jax.random.normal(ks[0], (1, h, sq, dh), jnp.float32)
+    k = jax.random.normal(ks[1], (1, h, sq, dh), jnp.float32)
+    v = jax.random.normal(ks[2], (1, h, sq, dh), jnp.float32)
+    out_k = flash_attention_tpu(q, k, v, causal=True, block_q=16,
+                                block_k=16, interpret=True)
+    naive = _naive_attention(q, k, v, True)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(naive),
+                               atol=3e-5, rtol=3e-5)
+
+
+# ---------------------------------------------------------------- ssd
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,G,S,P,N,chunk", [
+    (1, 2, 1, 64, 16, 16, 16),
+    (2, 4, 2, 128, 32, 32, 32),
+    (1, 8, 1, 96, 64, 128, 32),   # grouped broadcast, wide state
+])
+def test_ssd_kernel_matches_ref(B, H, G, S, P, N, chunk, dtype):
+    ks = jax.random.split(jax.random.key(1), 4)
+    xdt = jax.random.normal(ks[0], (B, H, S, P), dtype) * 0.5
+    dA = -jax.nn.softplus(jax.random.normal(ks[1], (B, H, S))) * 0.5
+    dA = dA.astype(dtype)
+    Bm = jax.random.normal(ks[2], (B, G, S, N), dtype) * 0.5
+    Cm = jax.random.normal(ks[3], (B, G, S, N), dtype) * 0.5
+    y_k, st_k = ssd_scan_tpu(xdt, dA, Bm, Cm, chunk=chunk, interpret=True)
+    y_r, st_r = ssd_scan_ref(xdt, dA, Bm, Cm, chunk=chunk)
+    tol = 5e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(y_k, np.float32),
+                               np.asarray(y_r, np.float32),
+                               atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(st_k, np.float32),
+                               np.asarray(st_r, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_ssd_model_chunked_matches_direct_recurrence():
+    """models/ssm.ssd_chunked (used by mamba2/zamba2) == exact recurrence."""
+    ks = jax.random.split(jax.random.key(2), 5)
+    B, S, H, P, G, N = 2, 64, 4, 16, 1, 32
+    x = jax.random.normal(ks[0], (B, S, H, P)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, G, N)) * 0.5
+    Cm = jax.random.normal(ks[4], (B, S, G, N)) * 0.5
+    y, fin = ssd_chunked(x, dt, A, Bm, Cm, chunk=16)
+
+    from repro.kernels.ssd_scan.ref import _direct
+    xdt = jnp.moveaxis(x * dt[..., None], 1, 2)
+    dA = jnp.moveaxis(dt * A[None, None, :], 1, 2)
+    y_d, fin_d = _direct(xdt, dA, jnp.moveaxis(Bm, 1, 2),
+                         jnp.moveaxis(Cm, 1, 2))
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(jnp.moveaxis(y_d, 1, 2)),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(fin), np.asarray(fin_d),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_ssd_decode_consistent_with_scan():
+    """Running ssd_chunked over S tokens == S single decode steps."""
+    from repro.models.ssm import ssd_decode_step
+    ks = jax.random.split(jax.random.key(3), 5)
+    B, S, H, P, G, N = 1, 8, 2, 8, 1, 16
+    x = jax.random.normal(ks[0], (B, S, H, P)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, G, N)) * 0.5
+    Cm = jax.random.normal(ks[4], (B, S, G, N)) * 0.5
+    y_scan, fin = ssd_chunked(x, dt, A, Bm, Cm, chunk=4)
+    state2 = jnp.zeros((B, H, P, N))
+    outs = []
+    for t in range(S):
+        y_t, state2 = ssd_decode_step(state2, x[:, t], dt[:, t], A,
+                                      Bm[:, t], Cm[:, t])
+        outs.append(y_t)
+    y_step = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_scan), np.asarray(y_step),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(fin), np.asarray(state2),
+                               atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------- rmsnorm
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(4, 64), (3, 7, 128), (130, 256)])
+def test_rmsnorm_kernel_matches_ref(shape, dtype):
+    ks = jax.random.split(jax.random.key(4), 2)
+    x = jax.random.normal(ks[0], shape, dtype)
+    w = jax.random.normal(ks[1], shape[-1:], dtype) + 1.0
+    out_k = rmsnorm_tpu(x, w, interpret=True, block_rows=8)
+    out_r = rmsnorm_ref(x, w)
+    tol = TOL[dtype]
+    np.testing.assert_allclose(np.asarray(out_k, np.float32),
+                               np.asarray(out_r, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@settings(max_examples=10, deadline=None)
+@given(rows=st.integers(1, 64), d=st.sampled_from([32, 128, 512]),
+       seed=st.integers(0, 50))
+def test_rmsnorm_property(rows, d, seed):
+    ks = jax.random.split(jax.random.key(seed), 2)
+    x = jax.random.normal(ks[0], (rows, d))
+    w = jax.random.normal(ks[1], (d,)) + 1.0
+    out_k = rmsnorm_tpu(x, w, interpret=True, block_rows=16)
+    np.testing.assert_allclose(np.asarray(out_k),
+                               np.asarray(rmsnorm_ref(x, w)),
+                               atol=2e-5, rtol=2e-5)
+    # invariance: rmsnorm(c*x) == rmsnorm(x) for any positive scale c
+    out_s = rmsnorm_tpu(3.7 * x, w, interpret=True, block_rows=16)
+    np.testing.assert_allclose(np.asarray(out_s), np.asarray(out_k),
+                               atol=2e-4, rtol=2e-4)

@@ -1,0 +1,112 @@
+import numpy as np
+import pytest
+
+from repro.core.comm_graph import CommGraph
+from repro.core.mapping import (bisect_graph, bisect_nodes, greedy_placement,
+                                hop_bytes, linear_placement, map_graph,
+                                random_placement, select_nodes)
+from repro.core.topology import TorusTopology
+from repro.workloads.patterns import lammps_like, npb_dt_like
+
+
+def test_bisect_graph_sizes():
+    rng = np.random.default_rng(0)
+    W = rng.random((20, 20))
+    W = W + W.T
+    for s in (1, 7, 10, 19):
+        in0 = bisect_graph(W, s)
+        assert in0.sum() == s
+
+
+def test_bisect_graph_finds_planted_partition():
+    # two dense blocks weakly connected: bisection must recover them
+    n = 16
+    W = np.zeros((n, n))
+    rng = np.random.default_rng(1)
+    for i in range(n):
+        for j in range(i + 1, n):
+            same = (i < 8) == (j < 8)
+            w = 10.0 + rng.random() if same else 0.01 * rng.random()
+            W[i, j] = W[j, i] = w
+    in0 = bisect_graph(W, 8)
+    side = in0[:8]
+    assert side.all() or not side.any(), "planted bisection not recovered"
+
+
+def test_bisect_nodes_geometric_compact():
+    t = TorusTopology((4, 8))
+    nodes = np.arange(32)
+    a, b = bisect_nodes(nodes, t.coords_array(), 16)
+    assert len(a) == 16 and len(b) == 16
+    # split along dim of span 8: each half spans half the long dimension
+    ca = t.coords_array()[a]
+    assert ca[:, 1].max() - ca[:, 1].min() <= 3
+
+
+def test_select_nodes_avoids_expensive():
+    t = TorusTopology((8, 8))
+    p = np.zeros(64)
+    bad = [0, 9, 18, 27]
+    p[bad] = 0.5
+    W = t.weight_matrix(p)
+    chosen = select_nodes(W, 16)
+    assert len(chosen) == 16
+    assert not set(bad) & set(chosen.tolist())
+
+
+def test_map_graph_valid_assignment():
+    wl = npb_dt_like(40)
+    t = TorusTopology((8, 8))
+    nodes = np.arange(64)
+    pl = map_graph(wl.comm.G_v, nodes, t.coords_array(), D=t.hop_matrix())
+    assert len(pl) == 40
+    assert len(set(pl.tolist())) == 40, "placement must be injective"
+    assert set(pl.tolist()) <= set(nodes.tolist())
+
+
+@pytest.mark.parametrize("wl_fn,n", [(lammps_like, 64), (npb_dt_like, 85)])
+def test_mapper_beats_random_and_linear(wl_fn, n):
+    """Fig. 3 property: topology-aware mapping lowers hop-bytes vs baselines."""
+    from repro.core.tofa import place
+    wl = wl_fn(n)
+    t = TorusTopology((8, 8, 8))
+    D = t.hop_matrix()
+    rng = np.random.default_rng(0)
+    mapped = place("topo", wl.comm, t).placement
+    lin = linear_placement(n, np.arange(t.n_nodes))
+    rand = random_placement(n, np.arange(t.n_nodes), rng)
+    hb_map = hop_bytes(wl.comm.G_v, D, mapped)
+    hb_lin = hop_bytes(wl.comm.G_v, D, lin)
+    hb_rand = hop_bytes(wl.comm.G_v, D, rand)
+    assert hb_map < hb_rand, "mapper must beat random placement"
+    assert hb_map < hb_lin, "mapper must beat sequential default placement"
+
+
+def test_mapper_beats_linear_on_irregular():
+    """The paper's key contrast: irregular patterns are where linear
+    (default-slurm) placement loses most (22% in Fig. 3a)."""
+    from repro.core.tofa import place
+    wl = npb_dt_like(85)
+    t = TorusTopology((8, 8, 8))
+    D = t.hop_matrix()
+    mapped = place("topo", wl.comm, t).placement
+    hb_map = hop_bytes(wl.comm.G_v, D, mapped)
+    hb_lin = hop_bytes(wl.comm.G_v, D, linear_placement(85, np.arange(512)))
+    assert hb_map < 0.85 * hb_lin, (
+        f"expected >15% hop-bytes win on irregular pattern, got "
+        f"{1 - hb_map / hb_lin:.1%}")
+
+
+def test_greedy_places_heaviest_pair_adjacent():
+    g = CommGraph(4)
+    g.add_p2p(0, 3, 1000.0)
+    g.add_p2p(1, 2, 10.0)
+    t = TorusTopology((4, 4))
+    pl = greedy_placement(g.G_v, np.arange(16), t.hop_matrix())
+    assert t.hop_matrix()[pl[0], pl[3]] == 1
+    assert len(set(pl.tolist())) == 4
+
+
+def test_linear_placement_is_identity_prefix():
+    pl = linear_placement(5, np.arange(100))
+    assert list(pl) == [0, 1, 2, 3, 4]

@@ -1,0 +1,147 @@
+"""Per-architecture smoke tests: reduced config, one forward + one train
+step + one decode step on CPU; assert shapes and finiteness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import reduced, shape_cells
+from repro.configs.registry import ARCHS, all_cells, get_arch
+from repro.models import model as M
+from repro.serve.decode import decode_step, prefill_cross_cache
+from repro.serve.kvcache import init_cache
+from repro.train.data import SyntheticDataset, extra_inputs
+from repro.train.optimizer import AdamW
+from repro.train.train_step import make_train_step
+
+B, S = 2, 32
+
+
+def _batch(cfg):
+    ds = SyntheticDataset(vocab=cfg.vocab, seq_len=S, global_batch=B, seed=0)
+    batch = ds.batch(0)
+    batch.update(extra_inputs(cfg, B, seq_len=S))
+    return batch
+
+
+@pytest.fixture(params=sorted(ARCHS), scope="module")
+def arch(request):
+    return request.param
+
+
+@pytest.fixture(scope="module")
+def setup(arch):
+    cfg = reduced(get_arch(arch))
+    params = M.init(cfg, jax.random.key(0))
+    return cfg, params
+
+
+def test_registry_has_all_ten():
+    assert len(ARCHS) == 10
+    cells = all_cells()
+    # 8 archs x 3 cells + 2 sub-quadratic archs x 4 cells = 32 live cells
+    assert len(cells) == 32
+
+
+def test_forward_shapes_and_finite(setup):
+    cfg, params = setup
+    batch = _batch(cfg)
+    logits = M.forward(cfg, params, batch)
+    assert logits.shape == (B, S, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all()), f"{cfg.name}: non-finite logits"
+
+
+def test_train_step_reduces_loss(setup):
+    cfg, params = setup
+    opt = AdamW(lr=1e-2, warmup_steps=1)
+    step = jax.jit(make_train_step(cfg, opt))
+    state = opt.init(params)
+    batch = _batch(cfg)
+    losses = []
+    p = params
+    for i in range(4):
+        p, state, metrics = step(p, state, batch)
+        losses.append(float(metrics["loss"]))
+        assert np.isfinite(losses[-1]), f"{cfg.name}: loss NaN at step {i}"
+    assert losses[-1] < losses[0], \
+        f"{cfg.name}: loss did not fall ({losses})"
+
+
+def test_decode_step_matches_forward(setup):
+    """Greedy decode logits at position t must match the forward pass —
+    cache correctness across every family."""
+    cfg, params = setup
+    batch = _batch(cfg)
+    tokens = batch["tokens"]
+    logits_fwd = M.forward(cfg, params, batch)
+
+    caches = init_cache(cfg, B, S)
+    if cfg.family == "vlm":
+        caches["cross"] = prefill_cross_cache(cfg, params,
+                                              batch["vision_embed"])
+    if cfg.family == "encdec":
+        # encode once, freeze the cross K/V
+        enc = _encode(cfg, params, batch)
+        caches["cross"] = prefill_cross_cache(cfg, params, enc,
+                                              which="decoder")
+
+    step = jax.jit(lambda c, t, p: decode_step(cfg, params, c, t, p))
+    errs = []
+    for t in range(min(S, 6)):
+        logits_t, caches = step(caches, tokens[:, t:t + 1],
+                                jnp.int32(t))
+        errs.append(float(jnp.max(jnp.abs(
+            logits_t[:, 0] - logits_fwd[:, t]))))
+    assert max(errs) < 2e-2, f"{cfg.name}: decode/forward drift {errs}"
+
+
+def _encode(cfg, params, batch):
+    """Encoder-only forward for the encdec cross cache (mirrors model.py)."""
+    from repro.models.layers import rmsnorm, mlp
+    from repro.models.model import _attn_apply, _rope, NULL_CTX
+    enc = batch["enc_embed"]
+    Se = enc.shape[1]
+    cos_e, sin_e = _rope(cfg, Se)
+
+    def enc_body(carry, p):
+        a, _ = _attn_apply(p, rmsnorm(carry, p["ln1"]), cfg, cos_e, sin_e,
+                           NULL_CTX, causal=False)
+        c = carry + a
+        c = c + mlp(p, rmsnorm(c, p["ln2"]), cfg.act)
+        return c, None
+    enc, _ = jax.lax.scan(enc_body, enc, params["encoder"])
+    return rmsnorm(enc, params["enc_norm"])
+
+
+def test_param_count_sane(arch):
+    """Full-config analytic parameter count is within 25% of the paper
+    numbers implied by the arch names (sanity only; catches schema drift)."""
+    expected = {
+        "smollm-135m": 135e6, "starcoder2-7b": 7e9,
+        "nemotron-4-340b": 340e9, "minicpm3-4b": 4e9,
+        "llama-3.2-vision-11b": 9.8e9,  # text backbone + cross layers only
+        "phi3.5-moe-42b": 42e9, "deepseek-v2-lite-16b": 16e9,
+        "mamba2-2.7b": 2.7e9, "zamba2-7b": 7e9,
+        "seamless-m4t-large-v2": 2.3e9,
+    }
+    cfg = get_arch(arch)
+    n = cfg.n_params
+    exp = expected[arch]
+    assert 0.6 * exp < n < 1.55 * exp, \
+        f"{arch}: analytic {n/1e9:.2f}B vs expected {exp/1e9:.2f}B"
+
+
+def test_moe_active_params_below_total():
+    cfg = get_arch("phi3.5-moe-42b")
+    assert cfg.n_active_params < 0.3 * cfg.n_params
+    dense = get_arch("starcoder2-7b")
+    assert dense.n_active_params == dense.n_params
+
+
+def test_long_context_cells_only_subquadratic():
+    for name, cfg in ARCHS.items():
+        cells = shape_cells(cfg)
+        if cfg.family in ("ssm", "hybrid"):
+            assert "long_500k" in cells, name
+        else:
+            assert "long_500k" not in cells, name

@@ -1,0 +1,105 @@
+import numpy as np
+import pytest
+
+from repro.cluster.failures import BernoulliPerJob, NoFailures
+from repro.core.comm_graph import CommGraph
+from repro.core.topology import TorusTopology
+from repro.sim.batchsim import run_batch, run_scenario
+from repro.sim.jobsim import simulate_instance, successful_runtime
+from repro.sim.network import TorusNetwork
+from repro.workloads.patterns import Workload, lammps_like, npb_dt_like
+
+
+@pytest.fixture(scope="module")
+def net():
+    return TorusNetwork(TorusTopology((4, 4, 4)))
+
+
+def _tiny_wl(n=4, nbytes=1e6):
+    g = CommGraph(n)
+    for i in range(n - 1):
+        g.add_p2p(i, i + 1, nbytes, 10)
+    return Workload("tiny", g, flops_per_rank=6e9, rounds=1, pattern="chain")
+
+
+def test_comm_time_adjacent_vs_far(net):
+    wl = _tiny_wl()
+    near = np.array([0, 1, 2, 3])          # chain along a torus row
+    far = np.array([0, 21, 42, 63])        # spread across the machine
+    assert net.comm_time(wl.comm, near) < net.comm_time(wl.comm, far)
+
+
+def test_comm_time_bandwidth_term(net):
+    # one pair, adjacent: serialization = bytes / bw (plus tiny latency)
+    g = CommGraph(2)
+    g.add_p2p(0, 1, 1.25e9, 1)  # 1 second at 10 Gbps
+    wl = Workload("pair", g, 0.0, 1, "p2p")
+    t = net.comm_time(wl.comm, np.array([0, 1]))
+    # symmetric convention routes half the bytes each direction
+    assert t == pytest.approx(0.5, rel=0.05)
+
+
+def test_compute_time(net):
+    assert net.compute_time(6e9, 2) == pytest.approx(2.0)
+
+
+def test_failed_node_on_route_aborts(net):
+    wl = _tiny_wl(2)
+    # place on 0 and 2: dimension-ordered route passes node 1
+    placement = np.array([0, 2])
+    out_ok = simulate_instance(wl, placement, net, np.array([], dtype=int))
+    assert out_ok.completed
+    out_mid = simulate_instance(wl, placement, net, np.array([1]))
+    assert not out_mid.completed, "failed intermediate hop must abort the job"
+    out_end = simulate_instance(wl, placement, net, np.array([2]))
+    assert not out_end.completed, "failed endpoint must abort the job"
+    out_far = simulate_instance(wl, placement, net, np.array([63]))
+    assert out_far.completed, "unrelated failed node must not abort"
+
+
+def test_batch_no_failures_time_is_linear(net):
+    wl = _tiny_wl()
+    r = run_batch(wl, "linear", net, NoFailures(), None, n_instances=10)
+    assert r.abort_ratio == 0.0
+    assert r.completion_time == pytest.approx(10 * r.success_runtime)
+
+
+def test_batch_with_failures_charges_restarts(net):
+    wl = _tiny_wl()
+    fm = BernoulliPerJob(np.arange(16), 0.3)   # aggressive failure rate
+    r = run_batch(wl, "linear", net, fm, None, n_instances=50,
+                  rng=np.random.default_rng(0))
+    assert r.n_aborted_attempts > 0
+    assert r.completion_time == pytest.approx(
+        (50 + r.n_aborted_attempts) * r.success_runtime)
+    assert r.abort_ratio > 0
+
+
+def test_checkpointing_reduces_abort_cost(net):
+    wl = _tiny_wl()
+    fm = BernoulliPerJob(np.arange(16), 0.3)
+    kw = dict(n_instances=50, rng=np.random.default_rng(0))
+    base = run_batch(wl, "linear", net, fm, None, **kw)
+    ck = run_batch(wl, "linear", net, fm, None,
+                   checkpoint_interval=base.success_runtime / 10,
+                   checkpoint_overhead=base.success_runtime / 200,
+                   rng=np.random.default_rng(0), n_instances=50)
+    assert ck.completion_time < base.completion_time
+
+
+def test_tofa_beats_linear_under_failures():
+    """Mini Fig. 4: TOFA must cut batch completion time vs default-slurm."""
+    res = run_scenario(
+        lambda: npb_dt_like(24), ("linear", "tofa"), dims=(4, 4, 4),
+        n_batches=3, n_instances=40, n_faulty=8, p_f=0.05, seed=1)
+    assert res["tofa"].mean_completion < res["linear"].mean_completion
+    assert res["tofa"].mean_abort_ratio <= res["linear"].mean_abort_ratio
+
+
+def test_scenario_paired_candidates():
+    """All policies inside a batch face the same N_f (paired comparison)."""
+    res = run_scenario(
+        lambda: lammps_like(16), ("linear", "random"), dims=(4, 4),
+        n_batches=2, n_instances=5, n_faulty=2, p_f=0.5, seed=3)
+    assert set(res) == {"linear", "random"}
+    assert len(res["linear"].batches) == 2

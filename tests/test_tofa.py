@@ -1,0 +1,108 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.tofa import POLICIES, place, tofa_place
+from repro.core.topology import TorusTopology
+from repro.workloads.patterns import lammps_like, npb_dt_like
+
+
+@pytest.fixture(scope="module")
+def torus():
+    return TorusTopology((8, 8, 8))
+
+
+def test_tofa_healthy_uses_window(torus):
+    wl = lammps_like(64)
+    res = tofa_place(wl.comm, torus, None)
+    assert res.used_consecutive_window
+    assert res.faulty_nodes_used == 0
+    assert len(set(res.placement.tolist())) == 64
+
+
+def test_tofa_avoids_faulty_nodes_when_window_exists(torus):
+    wl = npb_dt_like(85)
+    rng = np.random.default_rng(3)
+    p_f = np.zeros(512)
+    p_f[rng.choice(512, 16, replace=False)] = 0.02
+    res = tofa_place(wl.comm, torus, p_f)
+    assert res.faulty_nodes_used == 0, \
+        "TOFA must avoid faulty nodes when enough healthy nodes exist"
+
+
+def test_tofa_no_window_falls_back_to_weighted_map(torus):
+    # poison every 8th node: longest healthy run is 7 < 64 -> step 12 path
+    wl = lammps_like(64)
+    p_f = np.zeros(512)
+    p_f[::8] = 0.05
+    res = tofa_place(wl.comm, torus, p_f)
+    assert not res.used_consecutive_window
+    # 448 healthy nodes remain; weighted selection must still avoid faults
+    assert res.faulty_nodes_used == 0
+    assert len(set(res.placement.tolist())) == 64
+
+
+def test_tofa_tolerates_faults_when_unavoidable():
+    # 16-node torus, 60% faulty, 10-process job: some faults unavoidable
+    t = TorusTopology((4, 4))
+    p_f = np.zeros(16)
+    p_f[:10] = 0.5  # only 6 healthy nodes
+    wl = lammps_like(10)
+    res = tofa_place(wl.comm, t, p_f)
+    assert len(set(res.placement.tolist())) == 10
+    assert res.faulty_nodes_used >= 4  # needs at least 4 faulty
+
+
+def test_linear_is_default_slurm(torus):
+    wl = lammps_like(16)
+    res = place("linear", wl.comm, torus)
+    assert list(res.placement) == list(range(16))
+
+
+def test_all_policies_valid(torus):
+    wl = npb_dt_like(40)
+    for pol in POLICIES:
+        res = place(pol, wl.comm, torus, rng=np.random.default_rng(1))
+        assert len(res.placement) == 40
+        assert len(set(res.placement.tolist())) == 40, pol
+        assert res.policy == pol
+        assert (res.placement >= 0).all() and (res.placement < 512).all()
+
+
+def test_tofa_beats_linear_hop_bytes_on_irregular(torus):
+    wl = npb_dt_like(85)
+    hb = {p: place(p, wl.comm, torus, rng=np.random.default_rng(0)).hop_bytes
+          for p in ("linear", "tofa")}
+    assert hb["tofa"] < hb["linear"]
+
+
+def test_too_many_processes_raises():
+    t = TorusTopology((2, 2))
+    wl = lammps_like(10)
+    with pytest.raises(ValueError):
+        tofa_place(wl.comm, t, None)
+
+
+# ---------------------------------------------------------------- property
+@settings(max_examples=25, deadline=None)
+@given(
+    n_faulty=st.integers(0, 40),
+    n_procs=st.integers(2, 60),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_tofa_invariants(n_faulty, n_procs, seed):
+    """Any fault pattern: placement is injective, in range, and never uses a
+    faulty node while >= n_procs healthy nodes exist (Eq. 1's purpose)."""
+    rng = np.random.default_rng(seed)
+    t = TorusTopology((4, 4, 4))
+    p_f = np.zeros(64)
+    if n_faulty:
+        p_f[rng.choice(64, min(n_faulty, 64), replace=False)] = 0.02
+    wl = npb_dt_like(n_procs, seed=seed % 100)
+    res = tofa_place(wl.comm, t, p_f, rng=rng)
+    pl = res.placement
+    assert len(pl) == n_procs
+    assert len(set(pl.tolist())) == n_procs
+    assert (pl >= 0).all() and (pl < 64).all()
+    if (p_f == 0).sum() >= n_procs:
+        assert res.faulty_nodes_used == 0

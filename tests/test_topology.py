@@ -1,0 +1,108 @@
+import numpy as np
+import pytest
+
+from repro.core.topology import (TorusTopology, arrangements,
+                                 find_consecutive_healthy, FAULT_PENALTY)
+
+
+def test_coords_roundtrip():
+    t = TorusTopology((4, 3, 5))
+    for n in range(t.n_nodes):
+        assert t.node_at(t.coords(n)) == n
+
+
+def test_coords_array_matches_coords():
+    t = TorusTopology((3, 4))
+    arr = t.coords_array()
+    for n in range(t.n_nodes):
+        assert tuple(arr[n]) == t.coords(n)
+
+
+def test_route_length_equals_hop_distance():
+    t = TorusTopology((8, 8, 8))
+    rng = np.random.default_rng(0)
+    hops = t.hop_matrix()
+    for _ in range(50):
+        u, v = rng.integers(0, t.n_nodes, 2)
+        assert len(t.route(int(u), int(v))) == hops[u, v]
+
+
+def test_route_wraps_shortest_direction():
+    t = TorusTopology((8,))
+    # 0 -> 7 should go backwards through the wrap link (1 hop)
+    r = t.route(0, 7)
+    assert len(r) == 1 and r[0].dst == 7
+
+
+def test_route_endpoints():
+    t = TorusTopology((4, 4))
+    r = t.route(0, 15)
+    assert r[0].src == 0 and r[-1].dst == 15
+    # consecutive links chain
+    for a, b in zip(r[:-1], r[1:]):
+        assert a.dst == b.src
+
+
+def test_hop_matrix_symmetric_zero_diag():
+    t = TorusTopology((4, 4))
+    h = t.hop_matrix()
+    assert np.allclose(h, h.T)
+    assert np.allclose(np.diag(h), 0)
+    # max distance on a 4x4 torus is 2+2
+    assert h.max() == 4
+
+
+def test_weight_matrix_no_faults_is_hops():
+    t = TorusTopology((4, 4))
+    assert np.allclose(t.weight_matrix(None), t.hop_matrix())
+    assert np.allclose(t.weight_matrix(np.zeros(16)), t.hop_matrix())
+
+
+def test_weight_matrix_fault_penalty_eq1():
+    t = TorusTopology((8,))
+    p = np.zeros(8)
+    p[3] = 0.02
+    w = t.weight_matrix(p)
+    h = t.hop_matrix()
+    # 2 -> 4 routes through 3: two links touch node 3
+    assert w[2, 4] == h[2, 4] + 2 * FAULT_PENALTY
+    # 2 -> 3: one link (2,3) touches node 3
+    assert w[2, 3] == h[2, 3] + FAULT_PENALTY
+    # 0 -> 1 avoids node 3 entirely
+    assert w[0, 1] == h[0, 1]
+    # faulty path strictly worse than longest healthy path (paper rationale)
+    assert w[2, 3] > h.max()
+
+
+def test_weight_matrix_straggler_soft_penalty():
+    t = TorusTopology((8,))
+    s = np.zeros(8)
+    s[3] = 0.5
+    w = t.weight_matrix(None, straggler=s)
+    h = t.hop_matrix()
+    assert w[2, 3] == h[2, 3] + 0.5
+    assert w[0, 1] == h[0, 1]
+
+
+def test_neighbors_torus_degree():
+    t = TorusTopology((8, 8, 8))
+    assert len(t.neighbors(0)) == 6
+    t2 = TorusTopology((16, 16))
+    assert len(t2.neighbors(17)) == 4
+
+
+def test_find_consecutive_healthy():
+    p = np.zeros(16)
+    p[5] = 0.1
+    w = find_consecutive_healthy(p, 8)
+    assert w is not None and list(w) == list(range(6, 14))
+    assert find_consecutive_healthy(p, 11) is None
+    assert find_consecutive_healthy(p, 11, wrap=True) is not None
+    assert find_consecutive_healthy(np.zeros(4), 8) is None
+
+
+def test_arrangements_table1():
+    arrs = arrangements(256, 3)
+    for a in ((4, 8, 8), (4, 4, 16), (2, 8, 16)):
+        assert a in arrs
+    assert all(np.prod(a) == 256 for a in arrs)

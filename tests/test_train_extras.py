@@ -1,0 +1,98 @@
+"""Training-substrate tests: microbatching, optimizer, data pipeline."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import reduced
+from repro.configs.registry import get_arch
+from repro.models import model as M
+from repro.train.data import SyntheticDataset
+from repro.train.optimizer import AdamW
+from repro.train.train_step import cross_entropy, make_train_step
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced(get_arch("smollm-135m"), n_layers=2)
+    params = M.init(cfg, jax.random.key(0))
+    ds = SyntheticDataset(cfg.vocab, 16, 8, seed=0)
+    return cfg, params, ds
+
+
+def test_microbatch_accumulation_matches_full_batch(setup):
+    """grad accumulation over 4 microbatches == one full-batch step."""
+    cfg, params, ds = setup
+    opt = AdamW(lr=1e-3, warmup_steps=1)
+    batch = ds.batch(0)
+    s_full = jax.jit(make_train_step(cfg, opt, microbatches=1))
+    s_mb = jax.jit(make_train_step(cfg, opt, microbatches=4))
+    p1, st1, m1 = s_full(params, opt.init(params), batch)
+    p2, st2, m2 = s_mb(params, opt.init(params), batch)
+    assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), rel=1e-4)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=5e-5, rtol=5e-4)
+
+
+def test_optimizer_bf16_state_still_learns(setup):
+    cfg, params, ds = setup
+    opt = AdamW(lr=1e-2, warmup_steps=1, state_dtype=jnp.bfloat16)
+    step = jax.jit(make_train_step(cfg, opt))
+    state = opt.init(params)
+    assert jax.tree.leaves(state.m)[0].dtype == jnp.bfloat16
+    losses = []
+    p = params
+    for i in range(4):
+        p, state, m = step(p, state, ds.batch(0))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]
+
+
+def test_grad_clip_bounds_update():
+    opt = AdamW(lr=1.0, grad_clip=1e-6, warmup_steps=1, weight_decay=0.0)
+    params = {"w": jnp.ones((4,))}
+    state = opt.init(params)
+    grads = {"w": jnp.full((4,), 1e6)}
+    new, state, gnorm = opt.update(grads, state, params)
+    assert float(gnorm) > 1e5
+    # clipped step: |delta| <= lr * (1/(sqrt eps-ish)) but finite & small-ish
+    assert np.all(np.isfinite(np.asarray(new["w"])))
+
+
+def test_dataset_deterministic_and_learnable():
+    ds = SyntheticDataset(vocab=64, seq_len=32, global_batch=4, seed=9)
+    b1, b2 = ds.batch(5), ds.batch(5)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+    assert not np.array_equal(np.asarray(ds.batch(6)["tokens"]),
+                              np.asarray(b1["tokens"]))
+    # labels are the next-token shift of the same stream
+    toks = np.asarray(b1["tokens"])
+    labs = np.asarray(b1["labels"])
+    np.testing.assert_array_equal(toks[:, 1:], labs[:, :-1])
+    # mostly deterministic successor structure (noise = 0.1)
+    succ = ds._succ
+    match = (succ[toks[:, :-1]] == toks[:, 1:]).mean()
+    assert match > 0.8
+
+
+def test_cross_entropy_matches_manual():
+    logits = jnp.array([[[2.0, 0.0, -1.0]]])
+    labels = jnp.array([[0]])
+    got = float(cross_entropy(logits, labels))
+    p = np.exp([2.0, 0.0, -1.0])
+    want = -np.log(p[0] / p.sum())
+    assert got == pytest.approx(want, rel=1e-6)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 1000), vocab=st.sampled_from([16, 64]),
+       b=st.integers(1, 4))
+def test_dataset_tokens_in_range(seed, vocab, b):
+    ds = SyntheticDataset(vocab=vocab, seq_len=8, global_batch=b, seed=seed)
+    batch = ds.batch(0)
+    toks = np.asarray(batch["tokens"])
+    assert toks.min() >= 0 and toks.max() < vocab
+    assert toks.shape == (b, 8)
