@@ -11,7 +11,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.topology import TorusTopology
-from repro.core.tofa import place
+from repro.core.engine import PlacementEngine, PlacementRequest
 from repro.sim.jobsim import successful_runtime
 from repro.sim.network import TorusNetwork
 from repro.workloads.patterns import lammps_like, npb_dt_like
@@ -22,12 +22,14 @@ POLICIES = ("linear", "random", "greedy", "topo")
 def run(csv=print) -> dict:
     topo = TorusTopology((8, 8, 8))
     net = TorusNetwork(topo)
+    engine = PlacementEngine()
     out = {}
 
     wl = npb_dt_like(85)
+    req = PlacementRequest(comm=wl.comm, topology=topo)
     times = {}
     for pol in POLICIES:
-        res = place(pol, wl.comm, topo, rng=np.random.default_rng(0))
+        res = engine.place(req, policy=pol, rng=np.random.default_rng(0))
         times[pol] = successful_runtime(wl, res.placement, net)
         csv(f"fig3a,npb_dt_85,{pol},{times[pol]*1e6:.0f},us_exec_time")
     imp = 1 - times["topo"] / times["linear"]
@@ -37,9 +39,10 @@ def run(csv=print) -> dict:
 
     for n in (32, 64, 128, 256):
         wl = lammps_like(n)
+        req = PlacementRequest(comm=wl.comm, topology=topo)
         row = {}
         for pol in POLICIES:
-            res = place(pol, wl.comm, topo, rng=np.random.default_rng(0))
+            res = engine.place(req, policy=pol, rng=np.random.default_rng(0))
             t = successful_runtime(wl, res.placement, net)
             row[pol] = 1.0 / t  # timesteps/s proxy
             csv(f"fig3b,lammps_{n},{pol},{1.0/t:.3f},steps_per_s")

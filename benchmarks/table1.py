@@ -9,7 +9,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.topology import TorusTopology
-from repro.core.tofa import place
+from repro.core.engine import PlacementEngine, PlacementRequest
 from repro.sim.jobsim import successful_runtime
 from repro.sim.network import TorusNetwork
 from repro.workloads.patterns import lammps_like
@@ -19,13 +19,15 @@ ARRANGEMENTS = [(8, 8, 8), (4, 8, 16), (8, 4, 16), (4, 4, 32), (4, 32, 4)]
 
 def run(csv=print) -> dict:
     wl = lammps_like(256)
+    engine = PlacementEngine()
     out = {}
     for dims in ARRANGEMENTS:
         topo = TorusTopology(dims)
         net = TorusNetwork(topo)
+        req = PlacementRequest(comm=wl.comm, topology=topo)
         row = {}
         for pol in ("linear", "topo"):
-            res = place(pol, wl.comm, topo, rng=np.random.default_rng(0))
+            res = engine.place(req, policy=pol, rng=np.random.default_rng(0))
             t = successful_runtime(wl, res.placement, net)
             row[pol] = 1.0 / t
             name = "x".join(map(str, dims))

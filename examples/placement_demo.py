@@ -16,7 +16,8 @@ import jax.numpy as jnp         # noqa: E402
 import numpy as np              # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
-from repro.core.placement import Fabric, assign_devices, compare_policies  # noqa: E402
+from repro.core.engine import PlacementEngine, PlacementRequest  # noqa: E402
+from repro.core.placement import Fabric, assign_devices  # noqa: E402
 from repro.core.profiler import comm_graph_from_hlo  # noqa: E402
 
 
@@ -54,16 +55,18 @@ def main():
     p_f[[5, 6]] = 0.05
 
     print("== placement policies (hop-bytes; chips 5,6 unhealthy) ==")
-    rep = compare_policies(comm, fabric, p_f=p_f)
-    for pol, row in rep.items():
-        print(f"  {pol:8s} hop_bytes={row['hop_bytes']/1e6:10.2f}MB "
-              f"avg_dilation={row['avg_dilation']:.2f} "
-              f"faulty_chips_used={row['faulty_nodes_used']}")
+    engine = PlacementEngine()
+    req = PlacementRequest(comm=comm, topology=fabric, p_f=p_f)
+    for pol, plan in engine.compare(req).items():
+        print(f"  {pol:8s} hop_bytes={plan.hop_bytes/1e6:10.2f}MB "
+              f"avg_dilation={plan.avg_dilation:.2f} "
+              f"faulty_chips_used={plan.faulty_nodes_used} "
+              f"({plan.wall_time_s*1e3:.0f}ms)")
 
-    a = assign_devices(comm, fabric, policy="tofa", p_f=p_f)
+    a = assign_devices(comm, fabric, policy="tofa", p_f=p_f, engine=engine)
     print(f"\nTOFA device permutation: {a.permutation.tolist()}")
     print(f"hop-bytes vs linear: {a.improvement:+.1%} "
-          f"(faulty chips used: {a.result.faulty_nodes_used})")
+          f"(faulty chips used: {a.plan.faulty_nodes_used})")
 
 
 if __name__ == "__main__":

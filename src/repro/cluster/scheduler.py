@@ -7,13 +7,17 @@ Composes the pieces the paper wires into Slurm as five plugins:
 * ``Job.comm``          <- LoadMatrix plugin (the profiled communication
                            graph travels with the job submission)
 * ``Scheduler.submit``  <- srun --distribution={linear,random,greedy,topo,
-                           tofa}; FANS invokes the mapper and overrides the
-                           default task layout
+                           tofa,...}; FANS builds a PlacementRequest and the
+                           shared PlacementEngine overrides the default task
+                           layout
 
-Beyond the paper, the scheduler also supports *draining* (administratively
-removing nodes whose estimated outage crosses a threshold) and *elastic
-re-placement*: when a running job's node goes down, the job is re-placed on
-the surviving healthy nodes and restarted (from the latest checkpoint if the
+The scheduler owns one :class:`~repro.core.engine.PlacementEngine`, so hop
+and Eq. 1 weight matrices are derived once per (topology, health) state
+instead of once per submission.  Beyond the paper, it also supports
+*draining* (administratively removing nodes whose estimated outage crosses
+a threshold) and *elastic re-placement*: when a running job's node goes
+down, ``engine.replace`` moves only the displaced processes onto surviving
+healthy nodes and the job restarts (from the latest checkpoint if the
 checkpoint model is enabled in the batch simulator).
 """
 from __future__ import annotations
@@ -25,7 +29,7 @@ import numpy as np
 
 from repro.cluster.heartbeat import HeartbeatMonitor, MovingAverage
 from repro.cluster.nodes import NodeRegistry, NodeState
-from repro.core.tofa import PlacementResult, place
+from repro.core.engine import PlacementEngine, PlacementPlan, PlacementRequest
 from repro.core.topology import TorusTopology
 from repro.sim.jobsim import successful_runtime
 from repro.sim.network import TorusNetwork
@@ -44,7 +48,7 @@ class Job:
 @dataclasses.dataclass
 class JobRecord:
     job: Job
-    placement: PlacementResult
+    placement: PlacementPlan
     state: str = "pending"              # pending | running | done | failed
     runtime: float = 0.0
     restarts: int = 0
@@ -60,6 +64,7 @@ class Scheduler:
         estimator=None,
         drain_threshold: float = 0.5,
         seed: int = 0,
+        engine: PlacementEngine | None = None,
     ):
         self.registry = NodeRegistry(topo)
         self.topo = topo
@@ -68,6 +73,7 @@ class Scheduler:
                                         estimator or MovingAverage())
         self.drain_threshold = drain_threshold
         self.rng = np.random.default_rng(seed)
+        self.engine = engine or PlacementEngine()
         self.records: dict[int, JobRecord] = {}
         self.queue: list[Job] = []
 
@@ -89,25 +95,33 @@ class Scheduler:
         return p
 
     # ---------------------------------------------------------- placement
-    def select_nodes_for(self, job: Job) -> PlacementResult:
-        """FANS: invoke the mapper with (G from LoadMatrix, H from FATT,
-        p_f from the heartbeat history)."""
-        p_f = self.estimated_outage()
-        return place(job.distribution, job.workload.comm, self.topo,
-                     p_f=p_f, rng=self.rng, available=self.registry.up_ids())
+    def placement_request(self, job: Job) -> PlacementRequest:
+        """FANS inputs: G from LoadMatrix, H from FATT, p_f from the
+        heartbeat history, availability from the node registry."""
+        return PlacementRequest(
+            comm=job.workload.comm,
+            topology=self.topo,
+            p_f=self.estimated_outage(),
+            available=self.registry.up_ids(),
+        )
+
+    def select_nodes_for(self, job: Job) -> PlacementPlan:
+        return self.engine.place(self.placement_request(job),
+                                 policy=job.distribution, rng=self.rng)
 
     # ------------------------------------------------------------- running
     def submit(self, job: Job) -> JobRecord:
-        res = self.select_nodes_for(job)
-        rec = JobRecord(job=job, placement=res, state="running",
+        plan = self.select_nodes_for(job)
+        rec = JobRecord(job=job, placement=plan, state="running",
                         runtime=successful_runtime(job.workload,
-                                                   res.placement, self.net))
+                                                   plan.placement, self.net))
         self.records[job.job_id] = rec
         return rec
 
     def handle_node_failure(self, node_ids) -> list[JobRecord]:
         """Elastic re-placement (beyond paper): nodes went down; any running
-        job touching them is re-placed on surviving nodes and restarted."""
+        job touching them is incrementally re-placed on surviving nodes —
+        only the displaced processes move — and restarted."""
         node_ids = [int(x) for x in np.atleast_1d(node_ids)]
         self.registry.mark(node_ids, NodeState.DOWN)
         replaced = []
@@ -116,11 +130,17 @@ class Scheduler:
                 continue
             used = set(int(x) for x in rec.placement.placement)
             if used & set(node_ids):
-                res = self.select_nodes_for(rec.job)
-                rec.placement = res
+                # pass the *current* registry/heartbeat view — the plan's
+                # request carries the submit-time snapshot, stale once other
+                # nodes failed or drained after submission
+                rec.placement = self.engine.replace(
+                    rec.placement, node_ids, rng=self.rng,
+                    p_f=self.estimated_outage(),
+                    available=self.registry.up_ids())
                 rec.restarts += 1
                 rec.runtime = successful_runtime(rec.job.workload,
-                                                 res.placement, self.net)
+                                                 rec.placement.placement,
+                                                 self.net)
                 replaced.append(rec)
         return replaced
 

@@ -1,7 +1,18 @@
-"""TOFA core: the paper's contribution (comm graphs, topology, mapping)."""
+"""TOFA core: the paper's contribution (comm graphs, topology, mapping).
+
+The placement stack is served by :class:`~repro.core.engine.PlacementEngine`
+(typed request/plan, pluggable policy registry, topology protocol); the old
+``place``/``tofa_place`` entry points remain as deprecation shims.
+"""
 from repro.core.comm_graph import CommGraph
 from repro.core.topology import TorusTopology, find_consecutive_healthy
+from repro.core.fattree import FatTreeTopology
 from repro.core.mapping import hop_bytes, avg_dilation, map_graph
+from repro.core.engine import (PlacementEngine, PlacementPlan,
+                               PlacementRequest, Topology, default_engine)
+from repro.core.policies import (PlacementPolicy, PolicyContext, PolicyOutput,
+                                 UnknownPolicyError, available_policies,
+                                 get_policy, register_policy)
 from repro.core.tofa import tofa_place, place, PlacementResult, POLICIES
 from repro.core.placement import Fabric, assign_devices, compare_policies
 from repro.core.profiler import profile_hlo, comm_graph_from_hlo

@@ -1,0 +1,387 @@
+"""PlacementEngine — the unified placement service.
+
+One typed entry point replaces the old per-call-site wiring: a frozen
+:class:`PlacementRequest` (comm graph, topology, health snapshot ``p_f``,
+stragglers, availability mask, metric, seed) goes in and a
+:class:`PlacementPlan` (placement array, policy provenance, hop-bytes /
+dilation cost breakdown, faulty-node exposure, wall-time) comes out.
+
+Policies are classes registered in :mod:`repro.core.policies`; hosts are
+anything satisfying the :class:`Topology` protocol (``TorusTopology``,
+``Fabric``, ``FatTreeTopology``, ...).  The engine caches hop and Eq. 1
+weight matrices per (topology, health) key — the schedulers and batch
+simulators that place thousands of jobs against a slowly-changing health
+feed stop recomputing full topology state per job — and exposes
+:meth:`PlacementEngine.replace` for incremental re-placement when
+heartbeat-reported failures invalidate a running plan.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import OrderedDict
+from typing import Any, Iterable, Optional, Protocol, Sequence, runtime_checkable
+
+import numpy as np
+
+from .comm_graph import CommGraph
+from .mapping import avg_dilation, hop_bytes
+from .policies import PolicyContext, available_policies, get_policy
+
+
+@runtime_checkable
+class Topology(Protocol):
+    """Host-fabric protocol: anything exposing these can be placed onto.
+
+    Implementations in-tree: :class:`~repro.core.topology.TorusTopology`
+    (d-dim torus with dimension-ordered routing),
+    :class:`~repro.core.placement.Fabric` (per-pod ICI torus + DCN hop
+    layer), :class:`~repro.core.fattree.FatTreeTopology` (k-ary Clos).
+    """
+
+    @property
+    def n_nodes(self) -> int: ...
+
+    def coords_array(self) -> np.ndarray: ...
+
+    def hop_matrix(self) -> np.ndarray: ...
+
+    def weight_matrix(self, p_f: Optional[np.ndarray] = None,
+                      straggler: Optional[np.ndarray] = None) -> np.ndarray: ...
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class PlacementRequest:
+    """Everything a placement decision depends on, validated up front.
+
+    ``available`` restricts every policy to allocatable nodes (Slurm never
+    schedules onto DOWN/DRAINED nodes, independent of fault-awareness);
+    order is preserved — ``linear`` consumes it sequentially.
+    """
+
+    comm: CommGraph
+    topology: Topology
+    p_f: Optional[np.ndarray] = None          # per-node outage probability
+    straggler: Optional[np.ndarray] = None    # per-node slowdown factor
+    available: Optional[np.ndarray] = None    # allocatable node ids
+    metric: str = "volume"                    # guest edge weight: volume|messages
+    seed: int = 0                             # default RNG seed
+
+    def __post_init__(self):
+        n, N = self.comm.n, self.topology.n_nodes
+        if self.metric not in ("volume", "messages"):
+            raise ValueError(f"unknown metric {self.metric!r}")
+        for field in ("p_f", "straggler"):
+            v = getattr(self, field)
+            if v is None:
+                continue
+            v = np.asarray(v, dtype=np.float64)
+            if v.shape != (N,):
+                raise ValueError(
+                    f"{field} has shape {v.shape}, topology has {N} nodes")
+            object.__setattr__(self, field, v)
+        if self.available is not None:
+            a = np.asarray(self.available, dtype=np.int64)
+            if a.ndim != 1:
+                raise ValueError("available must be a 1-d array of node ids")
+            if a.size and (a.min() < 0 or a.max() >= N):
+                raise ValueError(
+                    f"available ids out of range [0, {N}) for this topology")
+            object.__setattr__(self, "available", a)
+        if n > N:
+            raise ValueError(f"{n} processes > {N} nodes")
+        if len(self.available_ids) < n:
+            raise ValueError(
+                f"{n} processes > {len(self.available_ids)} available nodes")
+
+    # ---------------------------------------------------------------- views
+    @property
+    def n_procs(self) -> int:
+        return self.comm.n
+
+    @property
+    def n_nodes(self) -> int:
+        return self.topology.n_nodes
+
+    @property
+    def available_ids(self) -> np.ndarray:
+        if self.available is None:
+            return np.arange(self.n_nodes)
+        return self.available
+
+    def effective_p_f(self) -> np.ndarray:
+        """Outage vector as the mapper sees it: unavailable nodes are
+        certain outages (pinned to 1.0) regardless of the heartbeat view."""
+        p = (np.zeros(self.n_nodes) if self.p_f is None
+             else self.p_f.copy())
+        if self.available is not None:
+            mask = np.ones(self.n_nodes, dtype=bool)
+            mask[self.available] = False
+            p[mask] = 1.0
+        return p
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class PlacementPlan:
+    """T = <process id, node id> plus provenance and cost diagnostics."""
+
+    placement: np.ndarray           # (n_procs,) node ids
+    policy: str                     # registry name that produced this plan
+    request: PlacementRequest       # the request it answers
+    hop_bytes: float                # dilation-volume under healthy hop metric
+    avg_dilation: float             # traffic-weighted mean hop distance
+    hop_bytes_fault_weighted: Optional[float]  # under Eq. 1 weights, if computed
+    faulty_nodes_used: int          # processes placed on p_f > 0 nodes
+    used_consecutive_window: bool   # TOFA step 10 succeeded?
+    wall_time_s: float              # mapper wall-clock for this plan
+    provenance: str = "place"       # place | replace-incremental | replace-full
+
+    @property
+    def n_procs(self) -> int:
+        return len(self.placement)
+
+    def as_pairs(self) -> list[tuple[int, int]]:
+        return [(i, int(nid)) for i, nid in enumerate(self.placement)]
+
+    def cost_breakdown(self) -> dict:
+        """Quality report: hop-bytes, dilation, fault exposure, wall time."""
+        return {
+            "hop_bytes": self.hop_bytes,
+            "avg_dilation": self.avg_dilation,
+            "hop_bytes_fault_weighted": self.hop_bytes_fault_weighted,
+            "faulty_nodes_used": self.faulty_nodes_used,
+            "wall_time_s": self.wall_time_s,
+        }
+
+    def to_result(self):
+        """Legacy :class:`~repro.core.tofa.PlacementResult` view (shim)."""
+        from .tofa import PlacementResult
+        return PlacementResult(
+            placement=self.placement,
+            policy=self.policy,
+            used_consecutive_window=self.used_consecutive_window,
+            hop_bytes=self.hop_bytes,
+            faulty_nodes_used=self.faulty_nodes_used,
+        )
+
+
+class PlacementEngine:
+    """Policy-pluggable, cache-backed placement service.
+
+    Hop matrices are cached per topology; Eq. 1 weight matrices per
+    (topology, p_f, straggler) with LRU eviction — weight matrices are the
+    expensive derivation (route enumeration per node pair), and health
+    snapshots repeat across jobs between heartbeat updates.
+    """
+
+    def __init__(self, default_policy: str = "tofa",
+                 max_cached_weights: int = 16):
+        self.default_policy = default_policy
+        self._hops: dict[Any, np.ndarray] = {}
+        self._coords: dict[Any, np.ndarray] = {}
+        self._weights: OrderedDict[Any, np.ndarray] = OrderedDict()
+        self._pinned: dict[int, Topology] = {}
+        self._max_weights = max_cached_weights
+        self.stats = {"hop_hits": 0, "hop_misses": 0,
+                      "weight_hits": 0, "weight_misses": 0}
+
+    # ------------------------------------------------------------ caching
+    def _topo_key(self, topo: Topology):
+        try:
+            hash(topo)
+            return topo       # dict resolves hash collisions via __eq__
+        except TypeError:     # unhashable adapter: identity, pinned alive
+            self._pinned[id(topo)] = topo
+            return ("id", id(topo))
+
+    def hops(self, topo: Topology) -> np.ndarray:
+        key = self._topo_key(topo)
+        if key not in self._hops:
+            self.stats["hop_misses"] += 1
+            self._hops[key] = topo.hop_matrix()
+        else:
+            self.stats["hop_hits"] += 1
+        return self._hops[key]
+
+    def coords(self, topo: Topology) -> np.ndarray:
+        key = self._topo_key(topo)
+        if key not in self._coords:
+            self._coords[key] = topo.coords_array()
+        return self._coords[key]
+
+    def weights(self, topo: Topology, p_f: Optional[np.ndarray] = None,
+                straggler: Optional[np.ndarray] = None) -> np.ndarray:
+        """Eq. 1 route-weight matrix for one (topology, health) state."""
+        no_fault = p_f is None or not (np.asarray(p_f) > 0).any()
+        no_slow = straggler is None or not (np.asarray(straggler) > 0).any()
+        if no_fault and no_slow:
+            # Eq. 1 with all-healthy nodes degenerates to the hop metric
+            return self.hops(topo)
+        key = (self._topo_key(topo),
+               None if p_f is None else np.asarray(p_f).tobytes(),
+               None if straggler is None else np.asarray(straggler).tobytes())
+        if key in self._weights:
+            self.stats["weight_hits"] += 1
+            self._weights.move_to_end(key)
+            return self._weights[key]
+        self.stats["weight_misses"] += 1
+        w = topo.weight_matrix(p_f, straggler=straggler)
+        self._weights[key] = w
+        while len(self._weights) > self._max_weights:
+            self._weights.popitem(last=False)
+        return w
+
+    def cache_stats(self) -> dict:
+        return dict(self.stats,
+                    cached_topologies=len(self._hops),
+                    cached_weight_matrices=len(self._weights))
+
+    # ----------------------------------------------------------- placement
+    def place(self, request: PlacementRequest, policy: Optional[str] = None,
+              *, rng: Optional[np.random.Generator] = None) -> PlacementPlan:
+        """Run one registered policy against one request."""
+        name = policy or self.default_policy
+        pol = get_policy(name)
+        rng = rng if rng is not None else np.random.default_rng(request.seed)
+        t0 = time.perf_counter()
+        topo = request.topology
+        p_f = request.effective_p_f()
+        straggler = request.straggler
+        ctx = PolicyContext(
+            request=request,
+            G_w=request.comm.weights(request.metric),
+            coords=self.coords(topo),
+            hops=self.hops(topo),
+            p_f=p_f,
+            available=request.available_ids,
+            rng=rng,
+            _weights_fn=lambda: self.weights(topo, p_f, straggler),
+        )
+        out = pol.place(ctx)
+        wall = time.perf_counter() - t0
+        return self._plan(request, name, np.asarray(out.placement),
+                          out.used_consecutive_window, ctx, wall, "place")
+
+    def compare(self, request: PlacementRequest,
+                policies: Optional[Iterable[str]] = None,
+                ) -> dict[str, PlacementPlan]:
+        """One plan per policy (fresh seeded RNG each) — the quality report."""
+        out = {}
+        for pol in (tuple(policies) if policies is not None
+                    else available_policies()):
+            rng = np.random.default_rng(request.seed)
+            out[pol] = self.place(request, policy=pol, rng=rng)
+        return out
+
+    # -------------------------------------------------------- re-placement
+    def replace(self, plan: PlacementPlan,
+                failed_nodes: Sequence[int] | np.ndarray,
+                *, rng: Optional[np.random.Generator] = None,
+                full: bool = False,
+                p_f: Optional[np.ndarray] = None,
+                available: Optional[np.ndarray] = None) -> PlacementPlan:
+        """Incremental fault-driven re-placement.
+
+        Marks ``failed_nodes`` as certain outages, removes them from the
+        availability mask, and moves only the displaced processes — each to
+        the free surviving node minimising its traffic-weighted Eq. 1 cost
+        against the processes that stay put.  Falls back to a full re-map
+        (``provenance="replace-full"``) when ``full=True`` or more than half
+        the job is displaced.  Raises ``ValueError`` when the survivors
+        cannot hold the job.
+
+        ``p_f`` / ``available`` refresh the health and availability view:
+        the plan's request carries the *submit-time* snapshot, which goes
+        stale once other nodes fail or drain after submission — a live
+        scheduler passes its current estimates here.
+        """
+        failed = np.unique(np.atleast_1d(np.asarray(failed_nodes,
+                                                    dtype=np.int64)))
+        req = plan.request
+        if failed.size and (failed.min() < 0 or failed.max() >= req.n_nodes):
+            raise ValueError(
+                f"failed node ids out of range [0, {req.n_nodes})")
+        base_p_f = req.p_f if p_f is None else np.asarray(p_f, np.float64)
+        new_p_f = (np.zeros(req.n_nodes) if base_p_f is None
+                   else base_p_f.copy())
+        new_p_f[failed] = 1.0
+        avail = (req.available_ids if available is None
+                 else np.asarray(available, dtype=np.int64))
+        new_avail = avail[~np.isin(avail, failed)]
+        if len(new_avail) < req.n_procs:
+            raise ValueError(
+                f"cannot re-place: {req.n_procs} processes > "
+                f"{len(new_avail)} surviving nodes")
+        new_req = dataclasses.replace(req, p_f=new_p_f, available=new_avail)
+
+        placement = plan.placement.copy()
+        displaced = np.flatnonzero(np.isin(placement, failed))
+        if full or len(displaced) > max(1, len(placement) // 2):
+            fresh = self.place(new_req, policy=plan.policy, rng=rng)
+            return dataclasses.replace(fresh, provenance="replace-full")
+
+        t0 = time.perf_counter()
+        ctx = PolicyContext(
+            request=new_req,
+            G_w=req.comm.weights(req.metric),
+            coords=self.coords(req.topology),
+            hops=self.hops(req.topology),
+            p_f=new_req.effective_p_f(),
+            available=new_avail,
+            rng=rng if rng is not None else np.random.default_rng(req.seed),
+        )
+        if len(displaced):
+            W = self.weights(req.topology, ctx.p_f, req.straggler)
+            ctx._weights = W
+            used = np.zeros(req.n_nodes, dtype=bool)
+            kept = np.ones(len(placement), dtype=bool)
+            kept[displaced] = False
+            used[placement[kept]] = True
+            free = new_avail[~used[new_avail]]
+            # heaviest talkers first: they constrain the remaining choices most
+            order = displaced[np.argsort(ctx.G_w[displaced].sum(axis=1))[::-1]]
+            settled = kept.copy()
+            for i in order:
+                peers = np.flatnonzero(settled)
+                if peers.size:
+                    cost = W[np.ix_(free, placement[peers])] @ ctx.G_w[i, peers]
+                else:
+                    cost = W[free].sum(axis=1)  # isolated: most central node
+                best = free[int(np.argmin(cost))]
+                placement[i] = best
+                settled[i] = True
+                free = free[free != best]
+        wall = time.perf_counter() - t0
+        return self._plan(new_req, plan.policy, placement,
+                          plan.used_consecutive_window, ctx, wall,
+                          "replace-incremental")
+
+    # ------------------------------------------------------------ internals
+    def _plan(self, request, policy, placement, used_window, ctx, wall,
+              provenance) -> PlacementPlan:
+        weighted = (hop_bytes(ctx.G_w, ctx.weights, placement)
+                    if ctx.weights_computed else None)
+        return PlacementPlan(
+            placement=placement,
+            policy=policy,
+            request=request,
+            hop_bytes=hop_bytes(ctx.G_w, ctx.hops, placement),
+            avg_dilation=avg_dilation(ctx.G_w, ctx.hops, placement),
+            hop_bytes_fault_weighted=weighted,
+            faulty_nodes_used=int((ctx.p_f[placement] > 0).sum()),
+            used_consecutive_window=used_window,
+            wall_time_s=wall,
+            provenance=provenance,
+        )
+
+
+_DEFAULT_ENGINE: Optional[PlacementEngine] = None
+
+
+def default_engine() -> PlacementEngine:
+    """Process-wide shared engine (used by the legacy shims so repeated
+    ``place()`` calls still benefit from matrix caching)."""
+    global _DEFAULT_ENGINE
+    if _DEFAULT_ENGINE is None:
+        _DEFAULT_ENGINE = PlacementEngine()
+    return _DEFAULT_ENGINE

@@ -205,6 +205,17 @@ def select_nodes(D: np.ndarray, count: int, seed: int | None = None) -> np.ndarr
     return np.flatnonzero(chosen)
 
 
+def best_map(G_w, node_sets, coords, D, rng) -> np.ndarray:
+    """Map onto each candidate node subset, keep the lowest hop-bytes."""
+    best, best_hb = None, np.inf
+    for nodes in node_sets:
+        pl = map_graph(G_w, np.asarray(nodes), coords, D=D, rng=rng)
+        hb = hop_bytes(G_w, D, pl)
+        if hb < best_hb:
+            best, best_hb = pl, hb
+    return best
+
+
 # --------------------------------------------------------------------------
 # dual recursive bipartitioning
 # --------------------------------------------------------------------------

@@ -11,11 +11,14 @@ This module computes that permutation:
 
   1. profile the compiled step (``core.profiler``) -> guest graph ``G`` over
      logical shard ids;
-  2. model the physical fabric (``core.topology``) — v5e pod = 16x16 2D
-     torus of chips over ICI; multi-pod adds a DCN dimension modelled as a
-     high-cost link layer;
+  2. model the physical fabric (:class:`Fabric`) — v5e pod = 16x16 2D torus
+     of chips over ICI; multi-pod adds a DCN dimension modelled as a
+     high-cost link layer.  ``Fabric`` satisfies the engine's ``Topology``
+     protocol, so it plugs straight into ``PlacementEngine`` alongside
+     ``TorusTopology`` and ``FatTreeTopology``;
   3. health feed (``cluster.heartbeat``) -> per-chip outage probabilities;
-  4. TOFA (``core.tofa``) maps logical shards onto physical chips.
+  4. the requested registry policy (default TOFA) maps logical shards onto
+     physical chips through the engine.
 
 ``placement[k] = physical chip id of logical shard k``; the mesh builder
 inverts this into a device reordering.
@@ -23,13 +26,14 @@ inverts this into a device reordering.
 from __future__ import annotations
 
 import dataclasses
+from typing import Iterable, Optional
 
 import numpy as np
 
 from .comm_graph import CommGraph
-from .mapping import avg_dilation, hop_bytes
-from .tofa import PlacementResult, place
-from .topology import TorusTopology
+from .engine import (PlacementEngine, PlacementPlan, PlacementRequest,
+                     default_engine)
+from .mapping import hop_bytes
 
 # DCN (inter-pod) links are ~an order of magnitude slower than ICI; in the
 # hop-cost model one pod-crossing counts as this many ICI hops.
@@ -38,7 +42,10 @@ DCN_HOP_COST = 10.0
 
 @dataclasses.dataclass(frozen=True)
 class Fabric:
-    """Physical fabric: per-pod 2D/3D torus of chips (+ optional pod axis)."""
+    """Physical fabric: per-pod 2D/3D torus of chips (+ optional pod axis).
+
+    Satisfies the :class:`~repro.core.engine.Topology` protocol.
+    """
 
     pod_dims: tuple[int, ...] = (16, 16)   # v5e pod: 16x16 ICI torus
     n_pods: int = 1
@@ -52,7 +59,13 @@ class Fabric:
     def n_chips(self) -> int:
         return self.chips_per_pod * self.n_pods
 
-    def torus(self) -> TorusTopology:
+    @property
+    def n_nodes(self) -> int:
+        """Topology-protocol alias: one placement slot per chip."""
+        return self.n_chips
+
+    def torus(self):
+        from .topology import TorusTopology
         return TorusTopology(self.pod_dims)
 
     def hop_matrix(self) -> np.ndarray:
@@ -110,9 +123,14 @@ class DeviceAssignment:
     """Result of a placement policy applied to a mesh."""
 
     permutation: np.ndarray     # perm[k] = device index for logical shard k
-    result: PlacementResult
+    plan: PlacementPlan
     hop_bytes_linear: float     # baseline (identity assignment) cost
     hop_bytes_placed: float     # cost under this assignment
+
+    @property
+    def result(self) -> PlacementPlan:
+        """Legacy alias kept from the pre-engine API."""
+        return self.plan
 
     @property
     def improvement(self) -> float:
@@ -121,41 +139,13 @@ class DeviceAssignment:
         return 1.0 - self.hop_bytes_placed / self.hop_bytes_linear
 
 
-class _FabricTopology(TorusTopology):
-    """Adapter: expose a Fabric to tofa.place (hop/weight matrices only)."""
-
-    def __init__(self, fabric: Fabric, p_f=None, straggler=None):
-        # TorusTopology is a frozen dataclass; bypass its immutability for
-        # this adapter's private fields.
-        object.__setattr__(self, "dims", (fabric.n_chips,))
-        object.__setattr__(self, "_fabric", fabric)
-        object.__setattr__(self, "_hops", fabric.hop_matrix())
-        object.__setattr__(self, "_p_f", p_f)
-        object.__setattr__(self, "_straggler", straggler)
-        object.__setattr__(self, "_coords", fabric.coords_array())
-
-    @property
-    def n_nodes(self) -> int:
-        return self._fabric.n_chips
-
-    def hop_matrix(self) -> np.ndarray:
-        return self._hops
-
-    def weight_matrix(self, p_f=None, c=1.0, straggler=None) -> np.ndarray:
-        return self._fabric.weight_matrix(
-            p_f if p_f is not None else self._p_f,
-            straggler if straggler is not None else self._straggler)
-
-    def coords_array(self) -> np.ndarray:
-        return self._coords
-
-
 def assign_devices(
     comm: CommGraph,
     fabric: Fabric,
     policy: str = "tofa",
     p_f: np.ndarray | None = None,
     rng: np.random.Generator | None = None,
+    engine: Optional[PlacementEngine] = None,
 ) -> DeviceAssignment:
     """Compute a device permutation for ``Mesh`` construction.
 
@@ -174,35 +164,37 @@ def assign_devices(
             f"{fabric.n_chips} chips")
     # comm.n < n_chips is fine: the job occupies a subset of the fabric
     # (placement[k] is then a chip id, not a permutation of 0..n-1)
-    topo = _FabricTopology(fabric, p_f=p_f)
-    res = place(policy, comm, topo, p_f=p_f, rng=rng)
-    hops = topo.hop_matrix()
+    engine = engine if engine is not None else default_engine()
+    req = PlacementRequest(comm=comm, topology=fabric, p_f=p_f)
+    plan = engine.place(req, policy=policy, rng=rng)
+    hops = engine.hops(fabric)
     identity = np.arange(comm.n)
     return DeviceAssignment(
-        permutation=res.placement.copy(),
-        result=res,
+        permutation=plan.placement.copy(),
+        plan=plan,
         hop_bytes_linear=hop_bytes(comm.G_v, hops, identity),
-        hop_bytes_placed=hop_bytes(comm.G_v, hops, res.placement),
+        hop_bytes_placed=hop_bytes(comm.G_v, hops, plan.placement),
     )
 
 
 def compare_policies(
     comm: CommGraph,
     fabric: Fabric,
-    policies=("linear", "random", "greedy", "topo", "tofa"),
+    policies: Optional[Iterable[str]] = None,
     p_f: np.ndarray | None = None,
     seed: int = 0,
+    engine: Optional[PlacementEngine] = None,
 ) -> dict:
-    """Hop-bytes and dilation per policy — the placement-quality report."""
-    out = {}
-    topo = _FabricTopology(fabric, p_f=p_f)
-    hops = topo.hop_matrix()
-    for pol in policies:
-        rng = np.random.default_rng(seed)
-        res = place(pol, comm, topo, p_f=p_f, rng=rng)
-        out[pol] = {
-            "hop_bytes": hop_bytes(comm.G_v, hops, res.placement),
-            "avg_dilation": avg_dilation(comm.G_v, hops, res.placement),
-            "faulty_nodes_used": res.faulty_nodes_used,
-        }
-    return out
+    """Hop-bytes and dilation per policy — the placement-quality report.
+
+    ``policies`` defaults to every registered policy.  All policies share
+    one engine, so the fabric's hop/weight matrices are derived once.
+    """
+    engine = engine if engine is not None else default_engine()
+    req = PlacementRequest(comm=comm, topology=fabric, p_f=p_f, seed=seed)
+    plans = engine.compare(req, policies=policies)
+    return {pol: {
+        "hop_bytes": plan.hop_bytes,
+        "avg_dilation": plan.avg_dilation,
+        "faulty_nodes_used": plan.faulty_nodes_used,
+    } for pol, plan in plans.items()}

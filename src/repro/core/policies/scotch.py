@@ -1,0 +1,27 @@
+"""``topo`` — topology-aware but fault-blind mapping (paper Section 5.1).
+
+The Scotch-analogue run of the paper's comparison: dual recursive
+bipartitioning onto the healthy hop metric, ignoring ``p_f`` entirely.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..mapping import best_map, select_nodes
+from .base import PolicyContext, PolicyOutput, register_policy
+
+
+@register_policy("topo")
+class ScotchPolicy:
+    """Fault-blind Scotch mapping: window + compact-ball candidates."""
+
+    fault_aware = False
+
+    def place(self, ctx: PolicyContext) -> PolicyOutput:
+        n, avail = ctx.n_procs, ctx.available
+        subsets = [avail[:n]]
+        if n < len(avail):
+            Wa = ctx.hops[np.ix_(avail, avail)]
+            subsets.append(avail[select_nodes(Wa, n)])
+        placement = best_map(ctx.G_w, subsets, ctx.coords, ctx.hops, ctx.rng)
+        return PolicyOutput(placement)

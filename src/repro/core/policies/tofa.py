@@ -1,0 +1,106 @@
+"""TOFA — TOpology and Fault-Aware process placement (paper Listing 1.1).
+
+    procedure TOFA(G, H):
+        S = find |V_G| consecutive nodes s.t. p_f = 0
+        if S != {}:
+            H_s := ScotchExtract(H, S)
+            T   := ScotchMap(G, H_s)
+        else:
+            T   := ScotchMap(G, H)     # H fault-weighted per Eq. (1)
+
+``map_graph`` (our Scotch analogue) plays ScotchMap; extraction is matrix
+restriction.  When no consecutive fault-free window exists, the guest is
+mapped onto a compact subset grown under the Eq. 1-weighted metric, which is
+how the 100x penalty steers placement away from failing nodes while
+tolerating them if unavoidable (the trade-off discussed in Section 3).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..mapping import best_map, map_graph, select_nodes
+from ..topology import find_consecutive_healthy
+from .base import PolicyContext, PolicyOutput, register_policy
+
+# additive weight that makes a node effectively unselectable (used to mask
+# faulty nodes out of ball extraction during TOFA step 14)
+FAULT_BLOCK = 1e9
+
+
+def _healthy_window_starts(p_f: np.ndarray, count: int) -> list[int]:
+    """Start ids of all length->=count runs of healthy nodes (non-overlapping
+    step count//2 within a run, to bound candidate count)."""
+    healthy = p_f == 0
+    starts: list[int] = []
+    i, n = 0, len(p_f)
+    while i + count <= n:
+        if healthy[i:i + count].all():
+            starts.append(i)
+            i += max(count // 2, 1)
+        else:
+            # jump past the first unhealthy node in the window
+            bad = i + int(np.argmax(~healthy[i:i + count]))
+            i = bad + 1
+    return starts
+
+
+@register_policy("tofa")
+class TofaPolicy:
+    """Listing 1.1: consecutive-healthy window first, Eq. 1 fallback."""
+
+    fault_aware = True
+
+    def place(self, ctx: PolicyContext) -> PolicyOutput:
+        n = ctx.n_procs
+        p_f = ctx.p_f
+        G_w = ctx.G_w
+        coords = ctx.coords
+        rng = ctx.rng
+
+        S = find_consecutive_healthy(p_f, n)
+        W = ctx.weights                       # Eq. 1 weights on H (cached)
+        if S is not None:
+            # steps 14-15: extract sub-topology, map onto it.  Listing 1.1's
+            # H carries Eq. 1 weights *before* extraction, so mapping quality
+            # is still judged fault-aware: a window placement whose internal
+            # routes cross a faulty node is priced at 100x and avoided.
+            # Several extraction shapes are tried (ScotchExtract is free to
+            # return any sub-arch): consecutive-id windows (slabs — ideal for
+            # banded guests) and compact balls grown from seeds spread across
+            # the healthy region; more candidates raise the odds of a region
+            # whose internal routes are entirely fault-free, which keeps full
+            # mapping quality *and* zero abort exposure.
+            W_sel = W + (FAULT_BLOCK * ((p_f[:, None] > 0) | (p_f[None, :] > 0)))
+            candidates = [S]
+            healthy = np.flatnonzero(p_f == 0)
+            # additional healthy windows beyond the first
+            run_starts = _healthy_window_starts(p_f, n)
+            for s0 in run_starts[1:4]:
+                candidates.append(np.arange(s0, s0 + n))
+            # balls from diverse seeds: default (cheapest region) + the
+            # healthy nodes farthest from any fault
+            candidates.append(select_nodes(W_sel, n))
+            if (p_f > 0).any():
+                dist_to_fault = W[:, p_f > 0].min(axis=1)
+                far = healthy[np.argsort(dist_to_fault[healthy])[::-1]]
+                for seed_node in far[:3]:
+                    candidates.append(select_nodes(W_sel, n, seed=int(seed_node)))
+            placement = best_map(G_w, candidates, coords, W, rng)
+            return PolicyOutput(placement, used_consecutive_window=True)
+
+        # step 12: map onto the full fault-weighted topology.  Weighted
+        # selection grows the cheapest (healthiest, most compact) subset.
+        # Improvement over plain Eq. 1 (see DESIGN.md): when >= n healthy
+        # nodes exist, restrict selection to them outright — Eq. 1 alone can
+        # tie a directly-faulty node with healthy nodes whose routes merely
+        # *pass through* faults, and lose that tie.  Faulty nodes are used
+        # only when the job cannot fit on healthy ones (the paper's
+        # tolerance trade-off).
+        healthy = np.flatnonzero(p_f == 0)
+        if len(healthy) >= n:
+            sub = select_nodes(W[np.ix_(healthy, healthy)], n)
+            nodes = healthy[sub]
+        else:
+            nodes = select_nodes(W, n)
+        placement = map_graph(G_w, nodes, coords, D=W, rng=rng)
+        return PolicyOutput(placement, used_consecutive_window=False)

@@ -1,66 +1,31 @@
-"""TOFA — TOpology and Fault-Aware process placement (paper Listing 1.1).
+"""Legacy TOFA entry points — thin shims over the PlacementEngine.
 
-    procedure TOFA(G, H):
-        S = find |V_G| consecutive nodes s.t. p_f = 0
-        if S != {}:
-            H_s := ScotchExtract(H, S)
-            T   := ScotchMap(G, H_s)
-        else:
-            T   := ScotchMap(G, H)     # H fault-weighted per Eq. (1)
-
-``map_graph`` (our Scotch analogue) plays ScotchMap; extraction is matrix
-restriction.  When no consecutive fault-free window exists, the guest is
-mapped onto a compact subset grown under the Eq. 1-weighted metric, which is
-how the 100x penalty steers placement away from failing nodes while
-tolerating them if unavoidable (the trade-off discussed in Section 3).
+The algorithm itself (paper Listing 1.1) lives in
+:mod:`repro.core.policies.tofa`; the string-dispatched policy set lives in
+the registry (:mod:`repro.core.policies`).  ``tofa_place`` / ``place`` are
+kept so pre-engine callers and tests continue to work unchanged — they
+build a :class:`~repro.core.engine.PlacementRequest`, run the shared
+:func:`~repro.core.engine.default_engine`, and down-convert the resulting
+:class:`~repro.core.engine.PlacementPlan` to the historical
+:class:`PlacementResult`.  New code should use the engine API directly.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 import numpy as np
 
 from .comm_graph import CommGraph
-from .mapping import (greedy_placement, hop_bytes, linear_placement,
-                      map_graph, random_placement, select_nodes)
-from .topology import TorusTopology, find_consecutive_healthy
-
-# additive weight that makes a node effectively unselectable (used to mask
-# faulty nodes out of ball extraction during TOFA step 14)
-FAULT_BLOCK = 1e9
-
-
-def _healthy_window_starts(p_f: np.ndarray, count: int) -> list[int]:
-    """Start ids of all length->=count runs of healthy nodes (non-overlapping
-    step count//2 within a run, to bound candidate count)."""
-    healthy = p_f == 0
-    starts: list[int] = []
-    i, n = 0, len(p_f)
-    while i + count <= n:
-        if healthy[i:i + count].all():
-            starts.append(i)
-            i += max(count // 2, 1)
-        else:
-            # jump past the first unhealthy node in the window
-            bad = i + int(np.argmax(~healthy[i:i + count]))
-            i = bad + 1
-    return starts
-
-
-def _best_map(G_w, node_sets, coords, D, rng) -> np.ndarray:
-    """Map onto each candidate node subset, keep the lowest hop-bytes."""
-    best, best_hb = None, np.inf
-    for nodes in node_sets:
-        pl = map_graph(G_w, np.asarray(nodes), coords, D=D, rng=rng)
-        hb = hop_bytes(G_w, D, pl)
-        if hb < best_hb:
-            best, best_hb = pl, hb
-    return best
+from .engine import PlacementRequest, default_engine
+from .policies import available_policies
+from .policies.tofa import FAULT_BLOCK  # noqa: F401  (legacy re-export)
+from .topology import TorusTopology
 
 
 @dataclasses.dataclass
 class PlacementResult:
-    """T = <process id, node id> plus quality diagnostics."""
+    """T = <process id, node id> plus quality diagnostics (legacy view)."""
 
     placement: np.ndarray          # (n_procs,) node ids
     policy: str
@@ -70,6 +35,13 @@ class PlacementResult:
 
     def as_pairs(self) -> list[tuple[int, int]]:
         return [(i, int(nid)) for i, nid in enumerate(self.placement)]
+
+
+def _deprecated(name: str) -> None:
+    warnings.warn(
+        f"repro.core.tofa.{name}() is deprecated; use "
+        "repro.core.engine.PlacementEngine with a PlacementRequest",
+        DeprecationWarning, stacklevel=3)
 
 
 def tofa_place(
@@ -82,65 +54,10 @@ def tofa_place(
     straggler: np.ndarray | None = None,
 ) -> PlacementResult:
     """Run TOFA (Listing 1.1) and return the placement with diagnostics."""
-    rng = rng or np.random.default_rng(0)
-    n = comm.n
-    N = topo.n_nodes
-    if n > N:
-        raise ValueError(f"{n} processes > {N} nodes")
-    p_f = np.zeros(N) if p_f is None else np.asarray(p_f, dtype=np.float64)
-    G_w = comm.weights(metric)
-    coords = topo.coords_array()
-    hops = topo.hop_matrix()
-
-    S = find_consecutive_healthy(p_f, n)
-    W = topo.weight_matrix(p_f, straggler=straggler)  # Eq. 1 weights on H
-    if S is not None:
-        # steps 14-15: extract sub-topology, map onto it.  Listing 1.1's H
-        # carries Eq. 1 weights *before* extraction, so mapping quality is
-        # still judged fault-aware: a window placement whose internal routes
-        # cross a faulty node is priced at 100x and avoided.  Several
-        # extraction shapes are tried (ScotchExtract is free to return any
-        # sub-arch): consecutive-id windows (slabs — ideal for banded
-        # guests) and compact balls grown from seeds spread across the
-        # healthy region; more candidates raise the odds of a region whose
-        # internal routes are entirely fault-free, which keeps full mapping
-        # quality *and* zero abort exposure.
-        W_sel = W + (FAULT_BLOCK * ((p_f[:, None] > 0) | (p_f[None, :] > 0)))
-        candidates = [S]
-        healthy = np.flatnonzero(p_f == 0)
-        # additional healthy windows beyond the first
-        run_starts = _healthy_window_starts(p_f, n)
-        for s0 in run_starts[1:4]:
-            candidates.append(np.arange(s0, s0 + n))
-        # balls from diverse seeds: default (cheapest region) + the healthy
-        # nodes farthest from any fault
-        candidates.append(select_nodes(W_sel, n))
-        if (p_f > 0).any():
-            dist_to_fault = W[:, p_f > 0].min(axis=1)
-            far = healthy[np.argsort(dist_to_fault[healthy])[::-1]]
-            for seed_node in far[:3]:
-                candidates.append(select_nodes(W_sel, n, seed=int(seed_node)))
-        placement = _best_map(G_w, candidates, coords, W, rng)
-        used_window = True
-    else:
-        # step 12: map onto the full fault-weighted topology.  Weighted
-        # selection grows the cheapest (healthiest, most compact) subset.
-        # Improvement over plain Eq. 1 (see DESIGN.md): when >= n healthy
-        # nodes exist, restrict selection to them outright — Eq. 1 alone can
-        # tie a directly-faulty node with healthy nodes whose routes merely
-        # *pass through* faults, and lose that tie.  Faulty nodes are used
-        # only when the job cannot fit on healthy ones (the paper's
-        # tolerance trade-off).
-        healthy = np.flatnonzero(p_f == 0)
-        if len(healthy) >= n:
-            sub = select_nodes(W[np.ix_(healthy, healthy)], n)
-            nodes = healthy[sub]
-        else:
-            nodes = select_nodes(W, n)
-        placement = map_graph(G_w, nodes, coords, D=W, rng=rng)
-        used_window = False
-
-    return _result(placement, "tofa", used_window, G_w, hops, p_f)
+    _deprecated("tofa_place")
+    req = PlacementRequest(comm=comm, topology=topo, p_f=p_f,
+                           straggler=straggler, metric=metric)
+    return default_engine().place(req, policy="tofa", rng=rng).to_result()
 
 
 def place(
@@ -153,57 +70,18 @@ def place(
     rng: np.random.Generator | None = None,
     available: np.ndarray | None = None,
 ) -> PlacementResult:
-    """Policy registry: 'linear' (default-slurm), 'random', 'greedy', 'tofa',
-    and 'topo' (topology-aware but fault-blind — the Section 5.1 Scotch run).
+    """Registry-dispatched placement: 'linear' (default-slurm), 'random',
+    'greedy', 'tofa', and 'topo' (topology-aware but fault-blind — the
+    Section 5.1 Scotch run), plus any third-party registered policy.
 
     ``available`` restricts every policy to allocatable nodes (Slurm never
     schedules onto DOWN/DRAINED nodes, independent of fault-awareness).
     """
-    rng = rng or np.random.default_rng(0)
-    n = comm.n
-    N = topo.n_nodes
-    p_f = np.zeros(N) if p_f is None else np.asarray(p_f, dtype=np.float64)
-    G_w = comm.weights(metric)
-    coords = topo.coords_array()
-    hops = topo.hop_matrix()
-    avail = np.arange(N) if available is None else np.asarray(available)
-    if len(avail) < n:
-        raise ValueError(f"{n} processes > {len(avail)} available nodes")
-
-    if policy == "tofa":
-        if available is not None:
-            # unavailable nodes are certain outages from the mapper's view
-            p_f = p_f.copy()
-            mask = np.ones(N, dtype=bool)
-            mask[avail] = False
-            p_f[mask] = 1.0
-        return tofa_place(comm, topo, p_f, metric=metric, rng=rng)
-    if policy == "linear":
-        placement = linear_placement(n, avail)
-    elif policy == "random":
-        placement = random_placement(n, avail, rng)
-    elif policy == "greedy":
-        placement = greedy_placement(G_w, avail, hops)
-    elif policy == "topo":
-        # fault-blind Scotch mapping (paper Section 5.1): window + ball
-        subsets = [avail[:n]]
-        if n < len(avail):
-            Wa = hops[np.ix_(avail, avail)]
-            subsets.append(avail[select_nodes(Wa, n)])
-        placement = _best_map(G_w, subsets, coords, hops, rng)
-    else:
-        raise ValueError(f"unknown policy {policy!r}")
-    return _result(placement, policy, False, G_w, hops, p_f)
+    _deprecated("place")
+    req = PlacementRequest(comm=comm, topology=topo, p_f=p_f,
+                           available=available, metric=metric)
+    return default_engine().place(req, policy=policy, rng=rng).to_result()
 
 
-def _result(placement, policy, used_window, G_w, hops, p_f) -> PlacementResult:
-    return PlacementResult(
-        placement=np.asarray(placement),
-        policy=policy,
-        used_consecutive_window=used_window,
-        hop_bytes=hop_bytes(G_w, hops, placement),
-        faulty_nodes_used=int((p_f[np.asarray(placement)] > 0).sum()),
-    )
-
-
-POLICIES = ("linear", "random", "greedy", "topo", "tofa")
+#: Legacy policy tuple — now sourced from the registry.
+POLICIES = available_policies()

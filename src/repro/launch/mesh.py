@@ -38,13 +38,16 @@ def make_tofa_mesh(
     multi_pod: bool = False,
     p_f: Optional[np.ndarray] = None,
     policy: str = "tofa",
+    engine=None,
 ):
     """Device-permuted production mesh.
 
     1. ``core.profiler`` extracts the per-shard traffic matrix from the
        compiled HLO (the paper's LoadMatrix input);
-    2. ``core.placement.assign_devices`` runs the requested policy against
-       the v5e fabric model (FATT input) and heartbeat health (p_f);
+    2. the requested registry policy runs through the
+       :class:`~repro.core.engine.PlacementEngine` against the v5e fabric
+       model (FATT input) and heartbeat health (p_f) — pass a shared
+       ``engine`` so repeated mesh builds reuse cached fabric matrices;
     3. the permutation is applied to ``jax.devices()``.
 
     Returns (mesh, DeviceAssignment) — the assignment carries hop-bytes
@@ -52,6 +55,7 @@ def make_tofa_mesh(
     """
     import jax
 
+    from repro.core.engine import default_engine
     from repro.core.placement import Fabric, assign_devices
     from repro.core.profiler import comm_graph_from_hlo
 
@@ -60,7 +64,8 @@ def make_tofa_mesh(
     n = int(np.prod(shape))
     fabric = Fabric(pod_dims=(16, 16), n_pods=2 if multi_pod else 1)
     comm = comm_graph_from_hlo(hlo_text, n_devices=n)
-    assignment = assign_devices(comm, fabric, policy=policy, p_f=p_f)
+    assignment = assign_devices(comm, fabric, policy=policy, p_f=p_f,
+                                engine=engine or default_engine())
     devs = np.asarray(jax.devices()[:n])
     # logical shard k runs on physical chip assignment.permutation[k]; on
     # real hardware jax.devices() is coordinate-ordered, so indexing by

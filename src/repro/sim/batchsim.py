@@ -22,7 +22,7 @@ import dataclasses
 import numpy as np
 
 from repro.cluster.failures import FailureModel
-from repro.core.tofa import place
+from repro.core.engine import PlacementEngine, PlacementRequest
 from repro.core.topology import TorusTopology
 from repro.sim.jobsim import simulate_instance, successful_runtime
 from repro.sim.network import TorusNetwork
@@ -53,16 +53,21 @@ def run_batch(
     checkpoint_interval: float | None = None,
     checkpoint_overhead: float = 0.0,
     max_attempts: int = 100,
+    engine: PlacementEngine | None = None,
 ) -> BatchResult:
     """Simulate one batch under one placement policy.
 
     ``known_p_f`` is what the scheduler *believes* (heartbeat-estimated);
     the failure model holds the ground truth.  Placement is computed once
-    per batch, as in the paper (N_f is fixed per batch).
+    per batch, as in the paper (N_f is fixed per batch).  Pass a shared
+    ``engine`` to reuse cached hop/weight matrices across batches and
+    policies instead of recomputing full topology state per job.
     """
     rng = rng or np.random.default_rng(0)
     topo = net.topo
-    res = place(policy, wl.comm, topo, p_f=known_p_f, rng=rng)
+    engine = engine or PlacementEngine()
+    req = PlacementRequest(comm=wl.comm, topology=topo, p_f=known_p_f)
+    res = engine.place(req, policy=policy, rng=rng)
     placement = res.placement
     t_ok = successful_runtime(wl, placement, net)
 
@@ -142,6 +147,9 @@ def run_scenario(
 
     topo = TorusTopology(dims)
     net = TorusNetwork(topo, **net_kw)
+    # one engine for the whole scenario: the torus hop matrix is derived
+    # once, and each batch's Eq. 1 weight matrix once (shared by policies)
+    engine = PlacementEngine()
     results: dict[str, list[BatchResult]] = {p: [] for p in policies}
     for b in range(n_batches):
         batch_rng = np.random.default_rng(seed * 1000 + b)
@@ -151,7 +159,8 @@ def run_scenario(
         wl = wl_factory()
         for pol in policies:
             r = run_batch(wl, pol, net, fm, known, n_instances=n_instances,
-                          rng=np.random.default_rng(seed * 7777 + b))
+                          rng=np.random.default_rng(seed * 7777 + b),
+                          engine=engine)
             results[pol].append(r)
     out = {}
     for pol in policies:

@@ -1,0 +1,26 @@
+"""Shared test utilities: optional-dependency guards."""
+import pytest
+
+
+def hypothesis_or_stubs():
+    """Return ``(given, settings, st)``, real or stand-in.
+
+    On a bare environment without ``hypothesis``, the stand-ins mark the
+    decorated property tests as skipped while the rest of the module still
+    collects and runs — the suite must never error at import time over an
+    optional dev dependency.
+    """
+    try:
+        from hypothesis import given, settings, strategies as st
+        return given, settings, st
+    except ImportError:
+        skip = pytest.mark.skip(reason="hypothesis not installed")
+
+        def deco(*args, **kwargs):
+            return lambda f: skip(f)
+
+        class _Strategies:
+            def __getattr__(self, name):
+                return lambda *a, **k: None
+
+        return deco, deco, _Strategies()

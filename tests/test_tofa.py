@@ -1,6 +1,9 @@
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from conftest import hypothesis_or_stubs
+
+given, settings, st = hypothesis_or_stubs()
 
 from repro.core.tofa import POLICIES, place, tofa_place
 from repro.core.topology import TorusTopology
