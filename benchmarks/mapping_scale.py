@@ -30,10 +30,10 @@ def run(csv=print) -> dict:
         name = "x".join(map(str, dims))
         row = {}
         for pol in ("linear", "random", "greedy", "topo"):
-            t0 = time.time()
+            t0 = time.perf_counter()
             plan = engine.place(req, policy=pol,
                                 rng=np.random.default_rng(0))
-            dt = time.time() - t0
+            dt = time.perf_counter() - t0
             row[pol] = (plan.hop_bytes, dt)
             csv(f"mapping_scale,{name}_n{n},{pol},{dt*1e3:.1f},"
                 f"ms_place_time,hop_bytes={plan.hop_bytes:.3e}")
@@ -64,18 +64,18 @@ def _cache_ablation(csv=print, dims=(8, 8, 4), n=85, n_faulty=12,
 
     uncached = []
     for _ in range(repeats):
-        t0 = time.time()
+        t0 = time.perf_counter()
         PlacementEngine().place(req, policy="tofa",
                                 rng=np.random.default_rng(0))
-        uncached.append(time.time() - t0)
+        uncached.append(time.perf_counter() - t0)
 
     engine = PlacementEngine()
     engine.place(req, policy="tofa", rng=np.random.default_rng(0))  # warm
     cached = []
     for _ in range(repeats):
-        t0 = time.time()
+        t0 = time.perf_counter()
         engine.place(req, policy="tofa", rng=np.random.default_rng(0))
-        cached.append(time.time() - t0)
+        cached.append(time.perf_counter() - t0)
 
     dt_un, dt_c = float(np.median(uncached)), float(np.median(cached))
     speedup = dt_un / dt_c if dt_c > 0 else float("inf")

@@ -14,7 +14,7 @@ import sys
 import time
 
 BENCHES = ("fig3", "table1", "fig4_5", "mapping_scale", "fault_ablation",
-           "roofline")
+           "refine_scale", "roofline")
 
 
 def main() -> int:
@@ -32,10 +32,10 @@ def main() -> int:
     rc = 0
     for name in names:
         mod = __import__(f"benchmarks.{name}", fromlist=["run"])
-        t0 = time.time()
+        t0 = time.perf_counter()
         try:
             mod.run(csv=lambda line: print(line, flush=True))
-            print(f"{name},wall_time,{time.time()-t0:.1f},s")
+            print(f"{name},wall_time,{time.perf_counter()-t0:.1f},s")
         except Exception as e:  # pragma: no cover
             rc = 1
             print(f"{name},ERROR,{e},exception", file=sys.stderr)

@@ -60,6 +60,27 @@ class CommGraph:
         self.G_m[i, j] += nmsgs
         self.G_m[j, i] += nmsgs
 
+    def _scatter_pairs(
+        self, src: np.ndarray, dst: np.ndarray, nbytes: float, nmsgs: float
+    ) -> None:
+        """Vectorized symmetric accumulation of many (src, dst) pairs.
+
+        ``np.add.at`` handles repeated pairs (e.g. the two directed ring
+        edges of a 2-rank group) by accumulating, exactly like sequential
+        ``add_p2p`` calls; self-pairs are dropped to match its i == j guard.
+        """
+        src = np.asarray(src, dtype=np.int64)
+        dst = np.asarray(dst, dtype=np.int64)
+        keep = src != dst
+        if not keep.all():
+            src, dst = src[keep], dst[keep]
+        if src.size == 0:
+            return
+        rows = np.concatenate([src, dst])
+        cols = np.concatenate([dst, src])
+        np.add.at(self.G_v, (rows, cols), nbytes)
+        np.add.at(self.G_m, (rows, cols), nmsgs)
+
     # ----------------------------------------------------------- collectives
     def add_all_reduce(
         self, ranks: Sequence[int], nbytes: float,
@@ -68,19 +89,21 @@ class CommGraph:
         g = len(ranks)
         if g <= 1:
             return
+        r = np.asarray(ranks, dtype=np.int64)
         if algorithm == "ring":
             # reduce-scatter phase + all-gather phase: each rank sends
             # 2*(g-1)/g*S to its ring successor over 2*(g-1) messages.
             per_pair = 2.0 * (g - 1) / g * nbytes
-            for a, b in _ring_pairs(ranks):
-                self.add_p2p(a, b, per_pair * repeats, 2 * (g - 1) * repeats)
+            self._scatter_pairs(r, np.roll(r, -1),
+                                per_pair * repeats, 2 * (g - 1) * repeats)
         elif algorithm == "recursive_doubling":
+            idx = np.arange(g)
             k = 1
             while k < g:
-                for idx, r in enumerate(ranks):
-                    peer = idx ^ k
-                    if peer < g and idx < peer:
-                        self.add_p2p(r, ranks[peer], nbytes * repeats, repeats)
+                peer = idx ^ k
+                m = (peer < g) & (idx < peer)
+                self._scatter_pairs(r[idx[m]], r[peer[m]],
+                                    nbytes * repeats, repeats)
                 k <<= 1
         else:
             raise ValueError(f"unknown all-reduce algorithm {algorithm!r}")
@@ -91,9 +114,10 @@ class CommGraph:
         g = len(ranks)
         if g <= 1:
             return
+        r = np.asarray(ranks, dtype=np.int64)
         per_pair = (g - 1) * shard_bytes
-        for a, b in _ring_pairs(ranks):
-            self.add_p2p(a, b, per_pair * repeats, (g - 1) * repeats)
+        self._scatter_pairs(r, np.roll(r, -1),
+                            per_pair * repeats, (g - 1) * repeats)
 
     def add_reduce_scatter(
         self, ranks: Sequence[int], full_bytes: float, repeats: float = 1.0
@@ -101,9 +125,10 @@ class CommGraph:
         g = len(ranks)
         if g <= 1:
             return
+        r = np.asarray(ranks, dtype=np.int64)
         per_pair = (g - 1) / g * full_bytes
-        for a, b in _ring_pairs(ranks):
-            self.add_p2p(a, b, per_pair * repeats, (g - 1) * repeats)
+        self._scatter_pairs(r, np.roll(r, -1),
+                            per_pair * repeats, (g - 1) * repeats)
 
     def add_all_to_all(
         self, ranks: Sequence[int], local_bytes: float, repeats: float = 1.0
@@ -111,10 +136,10 @@ class CommGraph:
         g = len(ranks)
         if g <= 1:
             return
+        r = np.asarray(ranks, dtype=np.int64)
         chunk = local_bytes / g
-        for i in range(g):
-            for j in range(i + 1, g):
-                self.add_p2p(ranks[i], ranks[j], 2 * chunk * repeats, 2 * repeats)
+        ii, jj = np.triu_indices(g, 1)
+        self._scatter_pairs(r[ii], r[jj], 2 * chunk * repeats, 2 * repeats)
 
     def add_broadcast(
         self, ranks: Sequence[int], nbytes: float, root: int = 0,
@@ -124,23 +149,26 @@ class CommGraph:
         g = len(ranks)
         if g <= 1:
             return
-        order = list(range(g))
+        r = np.asarray(ranks, dtype=np.int64)
+        order = np.arange(g)
         order[0], order[root] = order[root], order[0]
         k = 1
         while k < g:
-            for idx in range(k):
-                peer = idx + k
-                if peer < g:
-                    self.add_p2p(ranks[order[idx]], ranks[order[peer]],
-                                 nbytes * repeats, repeats)
+            idx = np.arange(min(k, g - k))
+            peer = idx + k
+            self._scatter_pairs(r[order[idx]], r[order[peer]],
+                                nbytes * repeats, repeats)
             k <<= 1
 
     def add_collective_permute(
         self, pairs: Iterable[tuple[int, int]], nbytes: float,
         repeats: float = 1.0,
     ) -> None:
-        for s, d in pairs:
-            self.add_p2p(s, d, nbytes * repeats, repeats)
+        pairs = np.asarray(list(pairs), dtype=np.int64)
+        if pairs.size == 0:
+            return
+        self._scatter_pairs(pairs[:, 0], pairs[:, 1],
+                            nbytes * repeats, repeats)
 
     # -------------------------------------------------------------- algebra
     def merged(self, other: "CommGraph") -> "CommGraph":
@@ -177,7 +205,10 @@ class CommGraph:
         bins = min(width, n)
         idx = (np.arange(n) * bins // n)
         agg = np.zeros((bins, bins))
-        np.add.at(agg, (idx[:, None].repeat(n, 1), idx[None, :].repeat(n, 0)), m)
+        # bin only the nonzero entries — the dense form materialised two
+        # n x n index arrays just to scatter a (typically sparse) matrix
+        i, j = np.nonzero(m)
+        np.add.at(agg, (idx[i], idx[j]), m[i, j])
         shades = " .:-=+*#%@"
         mx = agg.max()
         if mx <= 0:

@@ -180,10 +180,12 @@ class PlacementEngine:
         self._hops: dict[Any, np.ndarray] = {}
         self._coords: dict[Any, np.ndarray] = {}
         self._weights: OrderedDict[Any, np.ndarray] = OrderedDict()
+        self._shared: OrderedDict[Any, dict] = OrderedDict()
         self._pinned: dict[int, Topology] = {}
         self._max_weights = max_cached_weights
         self.stats = {"hop_hits": 0, "hop_misses": 0,
-                      "weight_hits": 0, "weight_misses": 0}
+                      "weight_hits": 0, "weight_misses": 0,
+                      "shared_hits": 0, "shared_misses": 0}
 
     # ------------------------------------------------------------ caching
     def _topo_key(self, topo: Topology):
@@ -231,10 +233,36 @@ class PlacementEngine:
             self._weights.popitem(last=False)
         return w
 
+    def shared_cache(self, topo: Topology,
+                     p_f: Optional[np.ndarray] = None,
+                     straggler: Optional[np.ndarray] = None) -> dict:
+        """Policy memo dict for one (topology, health) state.
+
+        Policies use it (via :meth:`PolicyContext.memo`) for
+        guest-independent intermediates — e.g. TOFA's consecutive-window
+        and compact-ball candidate node sets, which depend only on the
+        health snapshot and job size, not on the traffic matrix — so batch
+        runs placing many jobs against the same snapshot derive them once.
+        """
+        key = (self._topo_key(topo),
+               None if p_f is None else np.asarray(p_f).tobytes(),
+               None if straggler is None else np.asarray(straggler).tobytes())
+        if key in self._shared:
+            self.stats["shared_hits"] += 1
+            self._shared.move_to_end(key)
+            return self._shared[key]
+        self.stats["shared_misses"] += 1
+        d: dict = {}
+        self._shared[key] = d
+        while len(self._shared) > self._max_weights:
+            self._shared.popitem(last=False)
+        return d
+
     def cache_stats(self) -> dict:
         return dict(self.stats,
                     cached_topologies=len(self._hops),
-                    cached_weight_matrices=len(self._weights))
+                    cached_weight_matrices=len(self._weights),
+                    cached_shared_dicts=len(self._shared))
 
     # ----------------------------------------------------------- placement
     def place(self, request: PlacementRequest, policy: Optional[str] = None,
@@ -256,6 +284,7 @@ class PlacementEngine:
             available=request.available_ids,
             rng=rng,
             _weights_fn=lambda: self.weights(topo, p_f, straggler),
+            shared=self.shared_cache(topo, p_f, straggler),
         )
         out = pol.place(ctx)
         wall = time.perf_counter() - t0

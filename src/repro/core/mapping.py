@@ -22,8 +22,23 @@ scratch so the framework has no external solver dependency:
 
 Quality metric: ``hop_bytes`` = sum_{i<j} G_v[i,j] * d(place_i, place_j) —
 the standard dilation-volume objective these mappers minimise.
+
+Performance: the hot kernels (``_pairwise_refine``, ``bisect_graph``,
+``select_nodes``, ``greedy_placement``) are array-level NumPy
+implementations in the style of high-performance mapping codes (cf. Schulz
+& Träff, "Better Process Mapping and Sparse Quadratic Assignment"):
+per-process cost contributions are precomputed once, every candidate swap
+gain for a mover is evaluated with one matvec over the gathered distance
+matrix, and contributions are updated incrementally in O(n) after each
+accepted move instead of re-gathered per pass.  The original scalar-loop
+versions are retained as ``*_reference`` — they define the quality floor
+the vectorized kernels are differentially tested against
+(``tests/test_mapping_diff.py``) and the baseline ``benchmarks/refine_scale``
+measures speedups from.
 """
 from __future__ import annotations
+
+import contextlib
 
 import numpy as np
 
@@ -43,6 +58,30 @@ def hop_bytes(G_v: np.ndarray, D: np.ndarray, placement: np.ndarray) -> float:
     return float(0.5 * (G_v * D[np.ix_(p, p)]).sum())
 
 
+def hop_bytes_batch(
+    G_v: np.ndarray, D: np.ndarray, placements: np.ndarray,
+    max_block_elems: int = 64_000_000,
+) -> np.ndarray:
+    """Score a stack of candidate placements in one batched gather.
+
+    ``placements`` is (k, n); returns (k,) hop-bytes.  The D gather is
+    blocked so at most ``max_block_elems`` distance entries are materialised
+    at once (the k*n*n intermediate would otherwise dominate memory for
+    many candidates at large n).
+    """
+    P = np.asarray(placements)
+    if P.ndim == 1:
+        return np.array([hop_bytes(G_v, D, P)])
+    k, n = P.shape
+    out = np.empty(k, dtype=np.float64)
+    step = max(1, int(max_block_elems // max(n * n, 1)))
+    for s in range(0, k, step):
+        blk = P[s:s + step]
+        gathered = D[blk[:, :, None], blk[:, None, :]]   # (b, n, n)
+        out[s:s + step] = 0.5 * np.einsum("ij,kij->k", G_v, gathered)
+    return out
+
+
 def avg_dilation(G_v: np.ndarray, D: np.ndarray, placement: np.ndarray) -> float:
     """Traffic-weighted mean hop distance."""
     tot = np.triu(G_v, 1).sum()
@@ -59,11 +98,24 @@ def bisect_graph(
     W: np.ndarray,
     size0: int,
     rng: np.random.Generator | None = None,
-    fm_passes: int = 4,
+    fm_passes: int | None = None,
 ) -> np.ndarray:
     """Bisect vertices {0..n-1} of weighted graph W into parts of size
     (size0, n - size0), minimising cut weight.  Returns a bool array
-    ``in_part0`` of length n."""
+    ``in_part0`` of length n.
+
+    Vectorized kernel: greedy growing keeps the part-0 connection vector
+    masked in place (chosen entries pinned to -inf, no fresh ``np.where``
+    allocation per step) and FM refinement maintains per-vertex gains
+    incrementally — a swap updates ``int0`` by ``±W[:, moved]`` rows
+    instead of re-summing ``W[:, in0]`` each pass — and evaluates all
+    top-k x top-k pair deltas as one broadcast matrix.
+
+    ``fm_passes`` caps FM refinement passes (one swap each); ``None``
+    (default) runs until no improving pair remains — incremental gains
+    make extra passes nearly free, and deeper descent keeps this kernel
+    equal-or-better than the 4-pass scalar reference.
+    """
     n = W.shape[0]
     assert 0 <= size0 <= n
     if size0 == 0:
@@ -77,7 +129,64 @@ def bisect_graph(
     seed = int(np.argmin(deg))  # peripheral vertex
     in0 = np.zeros(n, dtype=bool)
     in0[seed] = True
-    # connection weight of every vertex to part 0
+    # connection weight of every vertex to part 0; chosen vertices are kept
+    # pinned at -inf so the running argmax needs no per-step re-mask
+    conn = W[seed].astype(np.float64, copy=True)
+    conn[seed] = -np.inf
+    for _ in range(size0 - 1):
+        nxt = int(np.argmax(conn))
+        if not np.isfinite(conn[nxt]):
+            nxt = int(rng.choice(np.flatnonzero(~in0)))
+        in0[nxt] = True
+        conn += W[nxt]           # -inf entries stay -inf
+        conn[nxt] = -np.inf
+
+    # --- FM refinement: swap boundary pairs with positive combined gain.
+    # gain(v) = (external weight) - (internal weight); moving v from its
+    # part to the other changes the cut by -gain(v).  We do balanced *pair*
+    # swaps (one from each side) so sizes stay exact.  ``int0`` (weight to
+    # part 0) is maintained incrementally across passes; each pass applies
+    # one swap, so n bounds the useful pass count.
+    int0 = W @ in0
+    max_passes = n if fm_passes is None else fm_passes
+    for _ in range(max_passes):
+        gain = np.where(in0, deg - 2.0 * int0, 2.0 * int0 - deg)
+        side0 = np.flatnonzero(in0)
+        side1 = np.flatnonzero(~in0)
+        if side0.size == 0 or side1.size == 0:
+            break
+        a = side0[np.argsort(gain[side0])[::-1][:8]]
+        b = side1[np.argsort(gain[side1])[::-1][:8]]
+        # swapping u<->v: delta_cut = -(gain_u + gain_v) + 2*W[u,v]
+        d = gain[a][:, None] + gain[b][None, :] - 2.0 * W[np.ix_(a, b)]
+        flat = int(np.argmax(d))
+        if d.flat[flat] <= 1e-12:
+            break
+        u, v = int(a[flat // len(b)]), int(b[flat % len(b)])
+        in0[u], in0[v] = False, True
+        int0 += W[:, v] - W[:, u]
+    return in0
+
+
+def bisect_graph_reference(
+    W: np.ndarray,
+    size0: int,
+    rng: np.random.Generator | None = None,
+    fm_passes: int = 4,
+) -> np.ndarray:
+    """Retained scalar-loop bisection (quality floor for differential tests)."""
+    n = W.shape[0]
+    assert 0 <= size0 <= n
+    if size0 == 0:
+        return np.zeros(n, dtype=bool)
+    if size0 == n:
+        return np.ones(n, dtype=bool)
+    rng = rng or np.random.default_rng(0)
+
+    deg = W.sum(axis=1)
+    seed = int(np.argmin(deg))
+    in0 = np.zeros(n, dtype=bool)
+    in0[seed] = True
     conn = W[seed].copy()
     for _ in range(size0 - 1):
         conn_masked = np.where(in0, -np.inf, conn)
@@ -87,15 +196,10 @@ def bisect_graph(
         in0[nxt] = True
         conn += W[nxt]
 
-    # --- FM refinement: swap boundary pairs with positive combined gain.
-    # gain(v) = (external weight) - (internal weight); moving v from its
-    # part to the other changes the cut by -gain(v).  We do balanced *pair*
-    # swaps (one from each side) so sizes stay exact.
     for _ in range(fm_passes):
-        int0 = W[:, in0].sum(axis=1)       # weight to part 0
-        int1 = W[:, ~in0].sum(axis=1)      # weight to part 1
+        int0 = W[:, in0].sum(axis=1)
+        int1 = W[:, ~in0].sum(axis=1)
         gain = np.where(in0, int1 - int0, int0 - int1)
-        # candidate movers: top-k positive-gain vertices on each side
         side0 = np.flatnonzero(in0)
         side1 = np.flatnonzero(~in0)
         if side0.size == 0 or side1.size == 0:
@@ -105,7 +209,6 @@ def bisect_graph(
         best, pair = 0.0, None
         for u in a:
             for v in b:
-                # swapping u<->v: delta_cut = -(gain_u + gain_v) + 2*W[u,v]
                 d = gain[u] + gain[v] - 2.0 * W[u, v]
                 if d > best + 1e-12:
                     best, pair = d, (u, v)
@@ -114,6 +217,11 @@ def bisect_graph(
         u, v = pair
         in0[u], in0[v] = False, True
     return in0
+
+
+def cut_weight(W: np.ndarray, in0: np.ndarray) -> float:
+    """Total weight crossing the (in0, ~in0) bisection — lower is better."""
+    return float(W[np.ix_(in0, ~in0)].sum())
 
 
 # --------------------------------------------------------------------------
@@ -187,11 +295,36 @@ def select_nodes(D: np.ndarray, count: int, seed: int | None = None) -> np.ndarr
     nearest peers (cheapest healthy region) and repeatedly add the node with
     minimum total weight to the chosen set.  The Eq. 1 fault penalty (100x)
     makes faulty nodes effectively unselectable unless unavoidable.
+
+    The frontier cost vector is maintained in place across steps — chosen
+    entries are pinned to +inf, so each step is one argmin + one row add,
+    with no per-step masked copy of the full N-node array.
     """
     n = D.shape[0]
     count = min(count, n)
     if seed is None:
         # cost of the best `count`-node ball centred at each node
+        part = np.partition(D, count - 1, axis=1)[:, :count]
+        seed = int(np.argmin(part.sum(axis=1)))
+    chosen = np.zeros(n, dtype=bool)
+    chosen[seed] = True
+    cost = D[seed].astype(np.float64, copy=True)
+    cost[seed] = np.inf
+    for _ in range(count - 1):
+        nxt = int(np.argmin(cost))
+        chosen[nxt] = True
+        cost += D[nxt]           # +inf entries stay +inf
+        cost[nxt] = np.inf
+    return np.flatnonzero(chosen)
+
+
+def select_nodes_reference(
+    D: np.ndarray, count: int, seed: int | None = None
+) -> np.ndarray:
+    """Retained scalar-masking subset growth (differential-test floor)."""
+    n = D.shape[0]
+    count = min(count, n)
+    if seed is None:
         part = np.partition(D, count - 1, axis=1)[:, :count]
         seed = int(np.argmin(part.sum(axis=1)))
     chosen = np.zeros(n, dtype=bool)
@@ -206,14 +339,17 @@ def select_nodes(D: np.ndarray, count: int, seed: int | None = None) -> np.ndarr
 
 
 def best_map(G_w, node_sets, coords, D, rng) -> np.ndarray:
-    """Map onto each candidate node subset, keep the lowest hop-bytes."""
-    best, best_hb = None, np.inf
-    for nodes in node_sets:
-        pl = map_graph(G_w, np.asarray(nodes), coords, D=D, rng=rng)
-        hb = hop_bytes(G_w, D, pl)
-        if hb < best_hb:
-            best, best_hb = pl, hb
-    return best
+    """Map onto each candidate node subset, keep the lowest hop-bytes.
+
+    All candidate placements are scored in one stacked ``hop_bytes_batch``
+    evaluation instead of k separate D gathers.
+    """
+    placements = [map_graph(G_w, np.asarray(nodes), coords, D=D, rng=rng)
+                  for nodes in node_sets]
+    if len(placements) == 1:
+        return placements[0]
+    scores = hop_bytes_batch(G_w, D, np.stack(placements))
+    return placements[int(np.argmin(scores))]
 
 
 # --------------------------------------------------------------------------
@@ -281,20 +417,98 @@ def map_graph(
         candidates.append(snake_order(nodes, coords)[:n].copy())
     if refine:
         candidates = [_pairwise_refine(G_w, D, c) for c in candidates]
-    scores = [hop_bytes(G_w, D, c) for c in candidates]
+    scores = hop_bytes_batch(G_w, D, np.stack(candidates))
     return candidates[int(np.argmin(scores))]
 
 
 def _pairwise_refine(
     G_w: np.ndarray, D: np.ndarray, placement: np.ndarray,
-    max_passes: int = 3,
+    max_passes: int = 3, movers: int = 64, extra_passes: int = 13,
 ) -> np.ndarray:
     """Greedy pairwise-swap refinement of a full placement under hop-bytes.
 
-    After recursive bipartitioning, try swapping the node assignments of
-    process pairs when it lowers sum_ij G_w[i,j] * D[p_i, p_j].  This is the
-    mapping-level counterpart of Scotch's recursive refinement and typically
-    shaves another few percent of hop-bytes.
+    Delta-based vectorized kernel.  State kept across swaps:
+
+      M        = sym(D)[p, p]  — gathered pairwise distances of the placement
+      C        = G_w * M       — per-pair cost terms
+      contrib  = C.sum(1)      — per-process cost contribution
+
+    For a mover ``i`` the gain of swapping with *every* ``j`` is one
+    broadcast expression (two matvecs, no inner Python loop):
+
+      gain = contrib[i] + contrib - 2*C[i] - M @ G_w[i] - G_w @ M[i]
+
+    (the i<->j mutual term cancels because swapping endpoints preserves
+    their own distance).  An accepted swap updates M, C and contrib
+    incrementally in O(n) — two row/column gathers — instead of
+    recomputing the O(n^2) gather per pass.
+
+    Passes beyond ``max_passes`` (up to ``extra_passes`` more) continue only
+    while improving: they are nearly free at array speed and let the refiner
+    descend at least as far as the scalar reference, which stops after
+    ``max_passes`` regardless.  A pass that accepts no swap leaves all state
+    unchanged, so the first such pass terminates refinement.
+    """
+    p = placement.copy()
+    n = len(p)
+    if n <= 1:
+        return p
+    G = G_w
+    if np.count_nonzero(np.diagonal(G)):
+        G = G.copy()
+        np.fill_diagonal(G, 0.0)
+    # symmetrise lazily on the gathered submatrix (hop_bytes implicitly
+    # symmetrises an asymmetric D, so the refiner must optimise the same
+    # objective); for the in-tree topologies D is already symmetric
+    M = D[np.ix_(p, p)].astype(np.float64)
+    M = 0.5 * (M + M.T)
+    C = G * M
+    contrib = C.sum(axis=1)
+
+    def gathered_row(node: int) -> np.ndarray:
+        return 0.5 * (D[node, p] + D[p, node])
+
+    for _ in range(max_passes + extra_passes):
+        improved = False
+        order = np.argsort(contrib)[::-1][: min(n, movers)]  # worst offenders
+        for i in order:
+            gains = (contrib[i] + contrib - 2.0 * C[i]
+                     - M @ G[i] - G @ M[i])
+            gains[i] = 0.0
+            j = int(np.argmax(gains))
+            if gains[j] <= 1e-9:
+                continue
+            # accept swap (i, j); update all state in O(n)
+            p[i], p[j] = p[j], p[i]
+            old_col_i, old_col_j = M[:, i].copy(), M[:, j].copy()
+            row_i, row_j = gathered_row(p[i]), gathered_row(p[j])
+            M[i, :] = row_i
+            M[:, i] = row_i
+            M[j, :] = row_j
+            M[:, j] = row_j
+            M[i, j] = M[j, i] = row_i[j]
+            contrib += (G[:, i] * (M[:, i] - old_col_i)
+                        + G[:, j] * (M[:, j] - old_col_j))
+            C[i, :] = G[i] * M[i]
+            C[:, i] = C[i, :]
+            C[j, :] = G[j] * M[j]
+            C[:, j] = C[j, :]
+            contrib[i] = C[i].sum()
+            contrib[j] = C[j].sum()
+            improved = True
+        if not improved:
+            break
+    return p
+
+
+def _pairwise_refine_reference(
+    G_w: np.ndarray, D: np.ndarray, placement: np.ndarray,
+    max_passes: int = 3,
+) -> np.ndarray:
+    """Retained scalar-loop refiner (quality floor for differential tests).
+
+    O(passes * movers * n^2) with Python-level inner loops — the pre-
+    vectorization hot path that dominated placement wall time.
     """
     p = placement.copy()
     n = len(p)
@@ -333,6 +547,31 @@ def _pairwise_refine(
 
 
 # --------------------------------------------------------------------------
+# reference-implementation switch (differential tests / baseline benchmarks)
+# --------------------------------------------------------------------------
+
+_VECTORIZED_IMPL = {}   # populated after greedy_placement is defined
+
+
+@contextlib.contextmanager
+def use_reference_impl():
+    """Temporarily swap the retained loop kernels into the mapping pipeline.
+
+    Inside the context, ``map_graph``/``best_map`` (and policies that
+    resolve kernels through this module) run the pre-vectorization
+    implementations — the baseline that ``benchmarks/refine_scale``
+    measures speedups against and differential tests compare quality with.
+    """
+    g = globals()
+    saved = {name: g[name] for name in _VECTORIZED_IMPL}
+    g.update({name: g[name + "_reference"] for name in _VECTORIZED_IMPL})
+    try:
+        yield
+    finally:
+        g.update(saved)
+
+
+# --------------------------------------------------------------------------
 # baseline placement policies of Section 5.1
 # --------------------------------------------------------------------------
 
@@ -353,7 +592,52 @@ def greedy_placement(
     G_w: np.ndarray, nodes: np.ndarray, D: np.ndarray,
 ) -> np.ndarray:
     """The paper's Greedy baseline: sort process pairs by traffic, place the
-    heaviest pairs as close as possible (starting from one hop)."""
+    heaviest pairs as close as possible (starting from one hop).
+
+    Vectorized: only positive-traffic pairs are sorted (the reference built
+    and sorted the full O(n^2) pair list), and the free-node frontier is a
+    maintained id array — nearest-free is an argmin over the shrinking
+    frontier, not a masked scan of the full N-node topology per step.
+    """
+    n = G_w.shape[0]
+    nodes = np.asarray(nodes)
+    iu = np.triu_indices(n, 1)
+    w = G_w[iu]
+    order = np.argsort(w)[::-1]
+    order = order[w[order] > 0]   # reference stops at the first <= 0 pair
+    pair_i, pair_j = iu[0][order], iu[1][order]
+
+    placement = np.full(n, -1, dtype=np.int64)
+    # frontier of free node ids, ascending (matches the reference's
+    # lowest-id tie-break for both first-free and nearest-free)
+    free = np.unique(nodes)
+
+    def take(pos_in_free: int) -> int:
+        nonlocal free
+        node = int(free[pos_in_free])
+        free = np.delete(free, pos_in_free)
+        return node
+
+    for i, j in zip(pair_i, pair_j):
+        pi, pj = placement[i], placement[j]
+        if pi < 0 and pj < 0:
+            a = take(0)
+            placement[i] = a
+            placement[j] = take(int(np.argmin(D[a, free])))
+        elif pi < 0:
+            placement[i] = take(int(np.argmin(D[pj, free])))
+        elif pj < 0:
+            placement[j] = take(int(np.argmin(D[pi, free])))
+    # any untouched processes (no traffic): fill with the lowest free ids
+    rem = np.flatnonzero(placement < 0)
+    placement[rem] = free[:len(rem)]
+    return placement
+
+
+def greedy_placement_reference(
+    G_w: np.ndarray, nodes: np.ndarray, D: np.ndarray,
+) -> np.ndarray:
+    """Retained scalar-loop greedy baseline (differential-test floor)."""
     n = G_w.shape[0]
     nodes = np.asarray(nodes)
     iu = np.triu_indices(n, 1)
@@ -392,10 +676,17 @@ def greedy_placement(
             b = nearest_free(pi)
             placement[j] = b
             used[b] = True
-    # any untouched processes (no traffic): fill linearly
     for i in range(n):
         if placement[i] < 0:
             a = first_free()
             placement[i] = a
             used[a] = True
     return placement
+
+
+_VECTORIZED_IMPL.update({
+    "bisect_graph": bisect_graph,
+    "select_nodes": select_nodes,
+    "greedy_placement": greedy_placement,
+    "_pairwise_refine": _pairwise_refine,
+})

@@ -48,6 +48,21 @@ class PolicyContext:
     rng: np.random.Generator
     _weights_fn: Optional[Callable[[], np.ndarray]] = None
     _weights: Optional[np.ndarray] = None
+    # engine-owned memo dict scoped to one (topology, health) state: policies
+    # stash guest-independent intermediates (e.g. TOFA's window/ball node-set
+    # candidates) here so repeated placements against the same health
+    # snapshot skip re-deriving them.  None when no engine cache backs the
+    # call (ad-hoc contexts in tests).
+    shared: Optional[dict] = None
+
+    def memo(self, key, fn: Callable[[], object]):
+        """Return ``fn()`` memoised under ``key`` in the engine-scoped
+        ``shared`` dict (or uncached when no dict was provided)."""
+        if self.shared is None:
+            return fn()
+        if key not in self.shared:
+            self.shared[key] = fn()
+        return self.shared[key]
 
     @property
     def n_procs(self) -> int:

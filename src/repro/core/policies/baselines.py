@@ -7,7 +7,7 @@ metric.
 """
 from __future__ import annotations
 
-from ..mapping import greedy_placement, linear_placement, random_placement
+from .. import mapping
 from .base import PolicyContext, PolicyOutput, register_policy
 
 
@@ -18,7 +18,7 @@ class LinearPolicy:
     fault_aware = False
 
     def place(self, ctx: PolicyContext) -> PolicyOutput:
-        return PolicyOutput(linear_placement(ctx.n_procs, ctx.available))
+        return PolicyOutput(mapping.linear_placement(ctx.n_procs, ctx.available))
 
 
 @register_policy("random")
@@ -29,7 +29,7 @@ class RandomPolicy:
 
     def place(self, ctx: PolicyContext) -> PolicyOutput:
         return PolicyOutput(
-            random_placement(ctx.n_procs, ctx.available, ctx.rng))
+            mapping.random_placement(ctx.n_procs, ctx.available, ctx.rng))
 
 
 @register_policy("greedy")
@@ -40,4 +40,4 @@ class GreedyPolicy:
 
     def place(self, ctx: PolicyContext) -> PolicyOutput:
         return PolicyOutput(
-            greedy_placement(ctx.G_w, ctx.available, ctx.hops))
+            mapping.greedy_placement(ctx.G_w, ctx.available, ctx.hops))

@@ -7,7 +7,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from ..mapping import best_map, select_nodes
+from .. import mapping
 from .base import PolicyContext, PolicyOutput, register_policy
 
 
@@ -22,6 +22,6 @@ class ScotchPolicy:
         subsets = [avail[:n]]
         if n < len(avail):
             Wa = ctx.hops[np.ix_(avail, avail)]
-            subsets.append(avail[select_nodes(Wa, n)])
-        placement = best_map(ctx.G_w, subsets, ctx.coords, ctx.hops, ctx.rng)
+            subsets.append(avail[mapping.select_nodes(Wa, n)])
+        placement = mapping.best_map(ctx.G_w, subsets, ctx.coords, ctx.hops, ctx.rng)
         return PolicyOutput(placement)

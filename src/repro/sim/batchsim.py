@@ -40,6 +40,7 @@ class BatchResult:
     success_runtime: float      # per-instance successful runtime
     placement: np.ndarray
     faulty_nodes_used: int
+    place_time_s: float = 0.0   # mapper wall-clock for this batch's placement
 
 
 def run_batch(
@@ -114,6 +115,7 @@ def run_batch(
         success_runtime=t_ok,
         placement=placement,
         faulty_nodes_used=res.faulty_nodes_used,
+        place_time_s=res.wall_time_s,
     )
 
 
@@ -123,6 +125,8 @@ class ScenarioResult:
     batches: list
     mean_completion: float
     mean_abort_ratio: float
+    mean_place_time_s: float = 0.0  # placement overhead per batch (Section 5:
+                                    # must stay negligible vs completion_time)
 
     def improvement_over(self, other: "ScenarioResult") -> float:
         return 1.0 - self.mean_completion / other.mean_completion
@@ -170,5 +174,6 @@ def run_scenario(
             batches=rs,
             mean_completion=float(np.mean([r.completion_time for r in rs])),
             mean_abort_ratio=float(np.mean([r.abort_ratio for r in rs])),
+            mean_place_time_s=float(np.mean([r.place_time_s for r in rs])),
         )
     return out
