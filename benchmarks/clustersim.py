@@ -1,0 +1,129 @@
+"""E8 (beyond paper) — event-driven cluster-simulator scenario sweep.
+
+Runs the scenario presets (``repro.sim.scenarios``) per policy and emits
+one CSV row per (scenario, policy) with mean job completion, makespan,
+abort and event counts.  ``--write --label <name>`` appends a point to
+the committed ``benchmarks/BENCH_clustersim.json`` trajectory;
+``--check`` exits non-zero when tofa does not beat linear on mean
+completion in the gated presets (``saturated-queue``,
+``correlated-failures``) — the CI smoke gate, bounded by fixed seeds and
+each preset's ``fast`` event budget.
+
+    PYTHONPATH=src python -m benchmarks.clustersim [--fast] [--check]
+    PYTHONPATH=src python -m benchmarks.clustersim --write --label pr3
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import sys
+import time
+
+from repro.sim.scenarios import run_preset
+
+BENCH_PATH = pathlib.Path(__file__).parent / "BENCH_clustersim.json"
+GATED = ("saturated-queue", "correlated-failures")
+PRESETS = ("paper-fig4-5", "saturated-queue", "mixed-stream", "fat-tree",
+           "correlated-failures", "drain-sweep")
+
+
+def _flat_rows(name: str, out: dict) -> list[dict]:
+    """Flatten a preset result into per-(policy[, threshold]) rows."""
+    rows = []
+    for pol, row in out["policies"].items():
+        if "mean_completion" in row:
+            rows.append(dict(
+                scenario=name, policy=pol,
+                mean_completion=row["mean_completion"],
+                makespan=row.get("makespan", row["mean_completion"]),
+                aborted_attempts=row["aborted_attempts"],
+                n_events=row["n_events"],
+                truncated=row.get("truncated", False)))
+        else:   # drain-sweep: one row per threshold
+            for th, r in row.items():
+                rows.append(dict(scenario=f"{name}/th={th}", policy=pol,
+                                 mean_completion=r["mean_completion"],
+                                 makespan=r["makespan"],
+                                 aborted_attempts=r["aborted_attempts"],
+                                 n_events=r["n_events"],
+                                 truncated=r.get("truncated", False)))
+    return rows
+
+
+def run(csv=print, fast: bool | None = None, seed: int = 0) -> dict:
+    if fast is None:
+        fast = bool(int(os.environ.get("FAST", "0")))
+    all_rows: list[dict] = []
+    summary: dict = {}
+    for name in PRESETS:
+        t0 = time.perf_counter()
+        out = run_preset(name, seed=seed, fast=fast)
+        wall = time.perf_counter() - t0
+        rows = _flat_rows(name, out)
+        all_rows += rows
+        summary[name] = out
+        for r in rows:
+            csv(f"clustersim,{r['scenario']},{r['policy']},"
+                f"{r['mean_completion']:.4f},s_mean_completion,"
+                f"makespan={r['makespan']:.4f},"
+                f"aborts={r['aborted_attempts']},events={r['n_events']}")
+        csv(f"clustersim,{name},wall_time,{wall:.1f},s")
+    for name in GATED:
+        pols = summary[name]["policies"]
+        imp = 1.0 - (pols["tofa"]["mean_completion"]
+                     / pols["linear"]["mean_completion"])
+        csv(f"clustersim,{name},tofa_improvement,{imp:.3f},frac")
+    summary["_rows"] = all_rows
+    return summary
+
+
+def check(summary: dict) -> int:
+    """CI gate: tofa must beat linear on mean completion where gated."""
+    rc = 0
+    for name in GATED:
+        pols = summary[name]["policies"]
+        tofa, lin = (pols["tofa"]["mean_completion"],
+                     pols["linear"]["mean_completion"])
+        ok = tofa < lin
+        print(f"GATE {name}: tofa={tofa:.4f} linear={lin:.4f} "
+              f"{'OK' if ok else 'FAIL'}")
+        if not ok:
+            rc = 1
+        if pols["tofa"].get("truncated") or pols["linear"].get("truncated"):
+            print(f"GATE {name}: FAIL (hit max_events budget)")
+            rc = 1
+    return rc
+
+
+def write_trajectory(rows: list[dict], label: str, fast: bool) -> None:
+    doc = {"schema": 1, "trajectory": []}
+    if BENCH_PATH.exists():
+        doc = json.loads(BENCH_PATH.read_text())
+    doc["trajectory"].append(
+        {"label": label, "fast": fast, "scenarios": rows})
+    BENCH_PATH.write_text(json.dumps(doc, indent=1) + "\n")
+    print(f"appended trajectory point {label!r} to {BENCH_PATH}")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero unless tofa beats linear on the "
+                         "gated presets")
+    ap.add_argument("--write", action="store_true",
+                    help="append a point to BENCH_clustersim.json")
+    ap.add_argument("--label", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    summary = run(fast=args.fast or None, seed=args.seed)
+    if args.write:
+        write_trajectory(summary["_rows"], args.label or "unlabeled",
+                         bool(args.fast))
+    return check(summary) if args.check else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

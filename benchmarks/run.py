@@ -14,7 +14,7 @@ import sys
 import time
 
 BENCHES = ("fig3", "table1", "fig4_5", "mapping_scale", "fault_ablation",
-           "refine_scale", "roofline")
+           "refine_scale", "clustersim", "roofline")
 
 
 def main() -> int:

@@ -1,0 +1,76 @@
+"""Event-driven cluster simulation — jobs sharing a failing cluster, live.
+
+A 216-node 6x6x6 torus runs a burst of mixed-size MPI-style jobs while
+two racks suffer correlated outages with repair: heartbeats feed the
+outage estimator, the scheduler queues and backfills, node failures
+abort the jobs holding them, ``engine.replace`` moves the displaced
+processes and restarts from the latest checkpoint.  Default-slurm
+(``linear``) and TOFA placement face the identical failure trace.
+
+    PYTHONPATH=src python examples/clustersim_demo.py
+"""
+import numpy as np
+
+from repro.cluster.failures import (CompositeProcess, CorrelatedOutages,
+                                    ExponentialLifetimes, contiguous_racks)
+from repro.cluster.scheduler import Scheduler
+from repro.core.engine import PlacementEngine
+from repro.core.topology import TorusTopology
+from repro.sim.clustersim import ClusterSim, SimConfig
+from repro.sim.network import network_for
+from repro.sim.scenarios import run_preset
+from repro.workloads.arrivals import burst_stream, mixed_size_factory
+
+
+def main():
+    topo = TorusTopology((6, 6, 6))
+    net = network_for(topo)
+    engine = PlacementEngine()     # shared: matrices derived once
+
+    # two flaky racks: they miss heartbeats AND actually go down
+    racks = contiguous_racks(topo.n_nodes, 36)
+    flaky_racks, flaky_ids = racks[:2], np.concatenate(racks[:2])
+    proc = CompositeProcess([
+        CorrelatedOutages(flaky_racks, mtbf=3.0, mttr=0.3),
+        ExponentialLifetimes(flaky_ids, mtbf=12.0, mttr=0.5),
+    ])
+
+    factory = mixed_size_factory(sizes=(16, 27))
+    wls = [factory(np.random.default_rng(100 + i)) for i in range(20)]
+
+    print(f"{topo.n_nodes}-node torus, {len(wls)} jobs at t=0, "
+          f"racks 0-1 ({len(flaky_ids)} nodes) flaky\n")
+    for pol in ("linear", "tofa"):
+        sch = Scheduler(topo, net=net, engine=engine, drain_threshold=0.6)
+        truth = np.zeros(topo.n_nodes)
+        truth[flaky_ids] = 0.25
+        sch.registry.set_outage_probabilities(flaky_ids, 0.25)
+        sch.monitor.simulate_rounds(np.random.default_rng(1), truth, 400)
+
+        sim = ClusterSim(
+            sch, burst_stream(wls, policy=pol), failure_process=proc,
+            config=SimConfig(heartbeat_interval=0.25,
+                             checkpoint_interval=0.05,
+                             checkpoint_overhead=0.002,
+                             restart_delay=0.01,
+                             failure_horizon=500.0),
+            rng=np.random.default_rng(7))
+        res = sim.run()
+        print(f"  {pol:6s} mean_completion={res.mean_completion:7.3f}s"
+              f"  makespan={res.makespan:7.3f}s"
+              f"  queue_wait={res.mean_queue_wait:6.3f}s"
+              f"  aborts={res.aborted_attempts:3d}"
+              f"  node_failures={res.node_failures}"
+              f"  events={res.n_events}")
+    print("\npaper protocol through the same event loop "
+          "(fast Fig. 4/5 preset):")
+    out = run_preset("paper-fig4-5", fast=True, seed=0)
+    lin = out["policies"]["linear"]["mean_completion"]
+    tofa = out["policies"]["tofa"]["mean_completion"]
+    print(f"  linear={lin:.2f}s  tofa={tofa:.2f}s  "
+          f"improvement={1 - tofa / lin:.1%} "
+          f"(matches batchsim.run_scenario exactly)")
+
+
+if __name__ == "__main__":
+    main()

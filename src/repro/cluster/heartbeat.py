@@ -6,6 +6,25 @@ probability is inferred by post-processing each node's heartbeat history
 ``HB(i)`` — the paper explicitly calls out moving / weighted-moving averages
 as candidate policies.  Both are implemented here, plus the latency-based
 straggler score used by the beyond-paper soft penalty.
+
+**Units.**  The monitor's ``clock`` advances by ``dt`` simulated seconds
+per ``poll`` (default 1.0 — one abstract round); sample timestamps and
+reply latencies are in the same seconds.  Estimates are probabilities in
+``[0, 1]`` per *round*: a node with ``p = 0.3`` misses ~30% of polls.
+
+**Truth vs estimate.**  What ``poll`` records is *observed* replies; the
+ground truth lives in the fault-injection layer
+(:mod:`repro.cluster.failures`) or
+``NodeRegistry.true_outage_p``.  ``outage_probabilities()`` is therefore
+the scheduler's *belief* — exactly the ``known_p_f`` side of the
+contract documented on :func:`repro.sim.batchsim.run_batch`:
+``simulate_rounds`` with enough rounds converges that belief to the
+truth (the paper's setting), few rounds model a cold or lagging
+estimator.
+
+**Determinism.**  The monitor itself never draws randomness;
+``simulate_rounds`` draws reply misses from the explicit ``rng``
+argument, so a heartbeat history is reproducible from its seed.
 """
 from __future__ import annotations
 
@@ -68,7 +87,11 @@ class HeartbeatMonitor:
 
     def poll(self, replies: np.ndarray, latencies: np.ndarray | None = None,
              dt: float = 1.0) -> None:
-        """One heartbeat round: ``replies[i]`` True if node i answered."""
+        """One heartbeat round: ``replies[i]`` True if node i answered.
+
+        ``dt`` is the poll interval in simulated seconds (the paper's
+        ``t``); ``latencies`` are per-node reply latencies in seconds
+        (straggler signal), ignored for missing replies."""
         self.clock += dt
         for i in range(self.n_nodes):
             lat = float(latencies[i]) if latencies is not None else 0.0
@@ -95,7 +118,14 @@ class HeartbeatMonitor:
     ) -> None:
         """Drive the monitor with synthetic heartbeats: node i misses each
         round with its true outage probability (the NodeState plugin simply
-        does not answer while a node is down)."""
+        does not answer while a node is down).
+
+        ``true_p`` is the *ground-truth* per-round miss probability; all
+        draws come from ``rng``, so the resulting estimate trajectory is
+        reproducible from the seed.  ~400 rounds converge a default
+        ``MovingAverage`` to within a few percent of ``true_p`` (see
+        ``tests/test_cluster.py``); the event simulator instead issues
+        live HEARTBEAT events for the same effect over simulated time."""
         for _ in range(n_rounds):
             replies = rng.random(self.n_nodes) >= true_p
             lat = np.full(self.n_nodes, baseline_latency)

@@ -15,15 +15,30 @@ The scheduler owns one :class:`~repro.core.engine.PlacementEngine`, so hop
 and Eq. 1 weight matrices are derived once per (topology, health) state
 instead of once per submission.  Beyond the paper, it also supports
 *draining* (administratively removing nodes whose estimated outage crosses
-a threshold) and *elastic re-placement*: when a running job's node goes
-down, ``engine.replace`` moves only the displaced processes onto surviving
+a threshold, with hysteresis so recovered nodes return to service) and
+*elastic re-placement*: when a running job's node goes down,
+``engine.replace`` moves only the displaced processes onto surviving
 healthy nodes and the job restarts (from the latest checkpoint if the
-checkpoint model is enabled in the batch simulator).
+checkpoint model is enabled in the simulator).
+
+**Queueing.**  Nodes are allocated exclusively per running job (Slurm's
+default exclusive node allocation).  ``submit`` enqueues; the pending
+queue is drained FIFO against free UP capacity whenever capacity changes
+(submit / complete / recover / undrain).  With ``backfill=True``
+(default) a job behind a blocked queue head may start early when it fits
+in currently-free capacity.  This is *greedy* capacity backfill: the
+scheduler is clock-free, has no runtime estimates, and makes no
+reservations, so — unlike EASY backfill — a backfilled job *can* delay
+the blocked head (it holds nodes the head would have received at the
+next completion).  Use ``backfill=False`` for strict FIFO when
+head-of-line fairness matters more than utilisation.  The simulated-time
+event loop that drives this queue lives in :mod:`repro.sim.clustersim`.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
+from typing import Optional
 
 import numpy as np
 
@@ -48,10 +63,11 @@ class Job:
 @dataclasses.dataclass
 class JobRecord:
     job: Job
-    placement: PlacementPlan
+    placement: Optional[PlacementPlan] = None   # None while pending
     state: str = "pending"              # pending | running | done | failed
     runtime: float = 0.0
     restarts: int = 0
+    requeues: int = 0                   # times bounced back to the queue
 
 
 class Scheduler:
@@ -63,8 +79,10 @@ class Scheduler:
         net: TorusNetwork | None = None,
         estimator=None,
         drain_threshold: float = 0.5,
+        undrain_threshold: float | None = None,
         seed: int = 0,
         engine: PlacementEngine | None = None,
+        backfill: bool = True,
     ):
         self.registry = NodeRegistry(topo)
         self.topo = topo
@@ -72,77 +90,198 @@ class Scheduler:
         self.monitor = HeartbeatMonitor(topo.n_nodes,
                                         estimator or MovingAverage())
         self.drain_threshold = drain_threshold
+        # hysteresis: a DRAINED node returns to service only once its
+        # estimate falls well below the drain trigger (default half)
+        self.undrain_threshold = (drain_threshold / 2.0
+                                  if undrain_threshold is None
+                                  else undrain_threshold)
+        self.backfill = backfill
         self.rng = np.random.default_rng(seed)
         self.engine = engine or PlacementEngine()
         self.records: dict[int, JobRecord] = {}
-        self.queue: list[Job] = []
+        self.queue: list[Job] = []              # pending jobs, FIFO order
+        self.allocated: dict[int, np.ndarray] = {}   # job_id -> node ids
 
     # -------------------------------------------------------------- health
     def heartbeat_round(self, replies: np.ndarray,
-                        latencies: np.ndarray | None = None) -> None:
-        self.monitor.poll(replies, latencies)
+                        latencies: np.ndarray | None = None,
+                        dt: float = 1.0) -> list[JobRecord]:
+        """One heartbeat poll: update estimates, drain/undrain, and drain
+        the pending queue if capacity came back.  Returns newly started
+        records (draining never kills running jobs — Slurm semantics).
+        ``dt`` is the poll interval in simulated seconds, forwarded to
+        the monitor's clock (the event simulator passes its
+        ``heartbeat_interval``; the default 1.0 reads as one abstract
+        round for direct callers)."""
+        self.monitor.poll(replies, latencies, dt=dt)
         p = self.monitor.outage_probabilities()
-        for i in np.flatnonzero(p >= self.drain_threshold):
-            if self.registry[int(i)].state == NodeState.UP:
-                self.registry.mark([int(i)], NodeState.DRAINED)
+        freed = False
+        for i in range(self.topo.n_nodes):
+            state = self.registry[i].state
+            if state == NodeState.UP and p[i] >= self.drain_threshold:
+                self.registry.mark([i], NodeState.DRAINED)
+            elif state == NodeState.DRAINED and p[i] < self.undrain_threshold:
+                self.registry.mark([i], NodeState.UP)
+                freed = True
+        return self.schedule_pending() if freed else []
 
     def estimated_outage(self) -> np.ndarray:
-        """p_f as FANS sees it: heartbeat estimate, drained nodes pinned."""
-        p = self.monitor.outage_probabilities()
+        """p_f as FANS sees it: heartbeat estimate, drained nodes pinned.
+
+        Estimates are quantized (ceil to 1e-3, which preserves the
+        ``p_f > 0`` pattern Eq. 1 consults) so that estimator jitter
+        between heartbeat rounds does not produce a fresh health key —
+        and hence a fresh Eq. 1 weight-matrix derivation — in the
+        engine's (topology, health) caches on every placement."""
+        p = np.ceil(self.monitor.outage_probabilities() * 1000.0) / 1000.0
         for n in self.registry.nodes:
             if n.state != NodeState.UP:
                 p[n.node_id] = 1.0
         return p
 
+    # ----------------------------------------------------------- capacity
+    def free_ids(self) -> np.ndarray:
+        """UP nodes not allocated to any running job, in id order."""
+        up = self.registry.up_ids()
+        if not self.allocated:
+            return up
+        busy = np.concatenate(list(self.allocated.values()))
+        return up[~np.isin(up, busy)]
+
     # ---------------------------------------------------------- placement
-    def placement_request(self, job: Job) -> PlacementRequest:
+    def placement_request(self, job: Job,
+                          available: np.ndarray | None = None
+                          ) -> PlacementRequest:
         """FANS inputs: G from LoadMatrix, H from FATT, p_f from the
-        heartbeat history, availability from the node registry."""
+        heartbeat history, availability from free UP capacity."""
         return PlacementRequest(
             comm=job.workload.comm,
             topology=self.topo,
             p_f=self.estimated_outage(),
-            available=self.registry.up_ids(),
+            available=self.free_ids() if available is None else available,
         )
 
-    def select_nodes_for(self, job: Job) -> PlacementPlan:
-        return self.engine.place(self.placement_request(job),
-                                 policy=job.distribution, rng=self.rng)
-
     # ------------------------------------------------------------- running
-    def submit(self, job: Job) -> JobRecord:
-        plan = self.select_nodes_for(job)
-        rec = JobRecord(job=job, placement=plan, state="running",
-                        runtime=successful_runtime(job.workload,
-                                                   plan.placement, self.net))
+    def enqueue(self, job: Job) -> JobRecord:
+        """Append to the pending queue without draining it — for callers
+        (the event simulator) that need :meth:`schedule_pending`'s list
+        of started records themselves."""
+        rec = JobRecord(job=job)
         self.records[job.job_id] = rec
+        self.queue.append(job)
         return rec
+
+    def submit(self, job: Job) -> JobRecord:
+        """Enqueue and try to start.  The returned record is ``running``
+        (with a placement) if capacity allowed, else ``pending``; other
+        queued jobs may start too as a side effect."""
+        rec = self.enqueue(job)
+        self.schedule_pending()
+        return rec
+
+    def schedule_pending(self) -> list[JobRecord]:
+        """Drain the pending queue FIFO against free capacity.
+
+        Without backfill, scanning stops at the first job that does not
+        fit (strict FIFO).  With backfill, later jobs are still tried —
+        a small job can slip past a blocked wide head into currently-free
+        nodes.  Greedy, reservation-free: the backfilled job may hold
+        nodes the head would have received at the next completion, so
+        wide jobs can be delayed by a stream of small ones (no starvation
+        bound; use ``backfill=False`` for strict FIFO fairness).
+        """
+        started: list[JobRecord] = []
+        remaining: list[Job] = []
+        blocked = False
+        for job in self.queue:
+            if blocked and not self.backfill:
+                remaining.append(job)
+                continue
+            rec = self.records[job.job_id]
+            free = self.free_ids()
+            if len(free) < job.workload.n_ranks:
+                remaining.append(job)
+                blocked = True
+                continue
+            plan = self.engine.place(self.placement_request(job, free),
+                                     policy=job.distribution, rng=self.rng)
+            rec.placement = plan
+            rec.state = "running"
+            rec.runtime = successful_runtime(job.workload, plan.placement,
+                                             self.net)
+            self.allocated[job.job_id] = np.asarray(plan.placement,
+                                                    dtype=np.int64).copy()
+            started.append(rec)
+        self.queue = remaining
+        return started
 
     def handle_node_failure(self, node_ids) -> list[JobRecord]:
         """Elastic re-placement (beyond paper): nodes went down; any running
-        job touching them is incrementally re-placed on surviving nodes —
-        only the displaced processes move — and restarted."""
+        job holding them is incrementally re-placed on surviving nodes —
+        only the displaced processes move — and restarted.  A job the
+        survivors cannot hold goes back to the head of the pending queue
+        (``state="pending"``).  Returns every affected record.
+
+        This method does *not* drain the pending queue, so the caller can
+        distinguish affected records from newly started ones: if a
+        requeued job released capacity another pending job fits in, call
+        :meth:`schedule_pending` afterwards (the event simulator does)."""
         node_ids = [int(x) for x in np.atleast_1d(node_ids)]
         self.registry.mark(node_ids, NodeState.DOWN)
-        replaced = []
+        affected = []
+        requeued: list[Job] = []
         for rec in self.records.values():
             if rec.state != "running":
                 continue
             used = set(int(x) for x in rec.placement.placement)
-            if used & set(node_ids):
+            if not (used & set(node_ids)):
+                continue
+            affected.append(rec)
+            # free this job's own allocation before re-placing so its
+            # surviving nodes remain usable by the replacement
+            del self.allocated[rec.job.job_id]
+            try:
                 # pass the *current* registry/heartbeat view — the plan's
                 # request carries the submit-time snapshot, stale once other
                 # nodes failed or drained after submission
                 rec.placement = self.engine.replace(
                     rec.placement, node_ids, rng=self.rng,
                     p_f=self.estimated_outage(),
-                    available=self.registry.up_ids())
-                rec.restarts += 1
-                rec.runtime = successful_runtime(rec.job.workload,
-                                                 rec.placement.placement,
-                                                 self.net)
-                replaced.append(rec)
-        return replaced
+                    available=self.free_ids())
+            except ValueError:
+                # survivors cannot hold the job: back to the queue head
+                rec.placement = None
+                rec.state = "pending"
+                rec.requeues += 1
+                requeued.append(rec.job)
+                continue
+            rec.restarts += 1
+            rec.runtime = successful_runtime(rec.job.workload,
+                                             rec.placement.placement,
+                                             self.net)
+            self.allocated[rec.job.job_id] = np.asarray(
+                rec.placement.placement, dtype=np.int64).copy()
+        if requeued:
+            self.queue = requeued + self.queue
+        return affected
 
-    def complete(self, job_id: int) -> None:
+    def recover(self, node_ids) -> list[JobRecord]:
+        """Repaired nodes return to service; returns newly started records.
+
+        A repaired node whose heartbeat estimate still sits at or above
+        ``drain_threshold`` comes back DRAINED, not UP — repair fixes the
+        outage, not the flakiness evidence, so the undrain hysteresis in
+        :meth:`heartbeat_round` keeps gating its return to placements."""
+        p = self.monitor.outage_probabilities()
+        for i in (int(x) for x in np.atleast_1d(node_ids)):
+            state = (NodeState.DRAINED if p[i] >= self.drain_threshold
+                     else NodeState.UP)
+            self.registry.mark([i], state)
+        return self.schedule_pending()
+
+    def complete(self, job_id: int) -> list[JobRecord]:
+        """Mark done, release nodes, and drain the queue onto the freed
+        capacity; returns newly started records."""
         self.records[job_id].state = "done"
+        self.allocated.pop(job_id, None)
+        return self.schedule_pending()

@@ -58,11 +58,24 @@ def run_batch(
 ) -> BatchResult:
     """Simulate one batch under one placement policy.
 
-    ``known_p_f`` is what the scheduler *believes* (heartbeat-estimated);
-    the failure model holds the ground truth.  Placement is computed once
-    per batch, as in the paper (N_f is fixed per batch).  Pass a shared
-    ``engine`` to reuse cached hop/weight matrices across batches and
-    policies instead of recomputing full topology state per job.
+    **The ``known_p_f`` contract** (truth vs estimate): the placement
+    policy only ever sees ``known_p_f`` — what the scheduler *believes*,
+    i.e. a heartbeat-derived estimate — while ``failure_model`` holds the
+    ground truth used to sample actual failures.  Passing
+    ``failure_model.outage_vector(...)`` models a perfectly converged
+    estimator (the paper's setting); passing a
+    :meth:`~repro.cluster.heartbeat.HeartbeatMonitor.outage_probabilities`
+    vector models imperfect knowledge (see ``benchmarks/fault_ablation``);
+    passing ``None`` models a fault-blind scheduler.  Eq. 1 only consults
+    ``p_f > 0``, so any estimator that flags the right *set* of nodes is
+    as good as the truth.
+
+    Placement is computed once per batch, as in the paper (N_f is fixed
+    per batch).  Pass a shared ``engine`` to reuse cached hop/weight
+    matrices across batches and policies instead of recomputing full
+    topology state per job.  ``rng`` drives both the per-attempt failure
+    draws and any stochastic policy; one batch is a pure function of
+    (workload, policy, rng state).
     """
     rng = rng or np.random.default_rng(0)
     topo = net.topo
@@ -96,11 +109,12 @@ def run_batch(
                 remaining = t_ok
             else:
                 # beyond paper: abort at a uniform point of the attempt;
-                # work up to the last checkpoint is preserved
+                # work up to the last checkpoint is preserved (n_kept
+                # writes were performed and are charged)
                 fail_at = rng.uniform(0.0, remaining)
-                kept = int(fail_at // checkpoint_interval) * checkpoint_interval
-                total_time += fail_at + (kept // max(checkpoint_interval, 1e-12)
-                                         ) * checkpoint_overhead
+                n_kept = int(fail_at // checkpoint_interval)
+                kept = n_kept * checkpoint_interval
+                total_time += fail_at + n_kept * checkpoint_overhead
                 remaining = remaining - kept
         if attempts > 1:
             aborted_instances += 1
@@ -142,15 +156,26 @@ def run_scenario(
     p_f: float = 0.02,
     seed: int = 0,
     scheduler_knows_truth: bool = True,
+    topology=None,
+    network=None,
     **net_kw,
 ) -> dict[str, ScenarioResult]:
     """The full Fig. 4/5 protocol: ``n_batches`` batches x ``n_instances``
     instances; per batch a fresh random N_f (shared by all policies so the
-    comparison is paired)."""
-    from repro.cluster.failures import BernoulliPerJob
+    comparison is paired).
 
-    topo = TorusTopology(dims)
-    net = TorusNetwork(topo, **net_kw)
+    Hosts: pass ``topology`` (any :class:`~repro.core.engine.Topology`
+    implementation — fat-tree, TPU fabric, ...) to run on a non-torus
+    platform; ``dims`` is the legacy torus shorthand used when ``topology``
+    is omitted.  ``network`` overrides the performance model (default: the
+    best in-tree model for the topology, see
+    :func:`repro.sim.network.network_for`).
+    """
+    from repro.cluster.failures import BernoulliPerJob
+    from repro.sim.network import network_for
+
+    topo = topology if topology is not None else TorusTopology(dims)
+    net = network if network is not None else network_for(topo, **net_kw)
     # one engine for the whole scenario: the torus hop matrix is derived
     # once, and each batch's Eq. 1 weight matrix once (shared by policies)
     engine = PlacementEngine()

@@ -1,4 +1,8 @@
-"""Flow-level torus network model — the SimGrid platform analogue.
+"""Network performance models — the SimGrid platform analogue.
+
+:class:`TorusNetwork` is the flow-level torus model below;
+:class:`HopNetwork` is a distance-level fallback that makes any
+``Topology`` implementation (fat-tree, TPU fabric) a simulation host.
 
 The paper simulates an 8x8x8 torus in SimGrid with 6 Gflops nodes, 10 Gbps
 / 1 usec links, and emulates a failed node by setting the capacity of all
@@ -112,3 +116,68 @@ class TorusNetwork:
 
     def compute_time(self, flops_per_rank: float, rounds: float) -> float:
         return flops_per_rank * rounds / self.node_flops
+
+
+@dataclasses.dataclass
+class HopNetwork:
+    """Distance-level network model for any :class:`~repro.core.engine.
+    Topology` implementation (fat-tree, TPU fabric, ...).
+
+    Where :class:`TorusNetwork` routes every flow over explicit links and
+    takes the bottleneck link as the bandwidth term, ``HopNetwork`` only
+    has the topology's hop-distance matrix to work with.  It charges:
+
+    * bandwidth: total *byte-hops* (``sum G_v[i,j] * hops(p_i, p_j)``)
+      spread over the job's ``n`` injection links — placement-sensitive
+      (proportional to the hop-bytes objective the mappers minimise) and
+      equal to the torus model's serialization in the uniform-load limit;
+    * latency: per-message hop latency of the chattiest pair, as in
+      :class:`TorusNetwork`.
+
+    The fault model is *endpoint form*, matching
+    :meth:`~repro.core.fattree.FatTreeTopology.weight_matrix`: multi-path
+    fabrics route around interior failures, so only a failed node that is
+    itself a job endpoint aborts the job.
+    """
+
+    topo: "object"                      # any Topology (hop_matrix + n_nodes)
+    link_bandwidth: float = 10 * GBPS
+    link_latency: float = 1e-6
+    node_flops: float = 6e9
+
+    def __post_init__(self):
+        self._hops: np.ndarray | None = None
+
+    def hop_matrix(self) -> np.ndarray:
+        if self._hops is None:
+            self._hops = self.topo.hop_matrix()
+        return self._hops
+
+    def touches_failed(self, comm: CommGraph, placement: np.ndarray,
+                       failed: np.ndarray) -> bool:
+        """Endpoint fault form: abort iff a failed node hosts a process."""
+        failed = np.asarray(failed).ravel()
+        if not failed.size:
+            return False
+        return bool(np.isin(np.asarray(placement), failed).any())
+
+    def comm_time(self, comm: CommGraph, placement: np.ndarray) -> float:
+        p = np.asarray(placement)
+        D = self.hop_matrix()
+        hops = D[np.ix_(p, p)]
+        byte_hops = float((comm.G_v * hops).sum()) / 2.0  # symmetric G
+        t_bw = byte_hops / (self.link_bandwidth * max(comm.n, 1))
+        t_lat = float((comm.G_m * hops).max()) * self.link_latency
+        return t_bw + t_lat
+
+    def compute_time(self, flops_per_rank: float, rounds: float) -> float:
+        return flops_per_rank * rounds / self.node_flops
+
+
+def network_for(topo, **kw):
+    """Pick the highest-fidelity in-tree network model for a topology:
+    flow-level :class:`TorusNetwork` for tori, distance-level
+    :class:`HopNetwork` for everything else."""
+    if isinstance(topo, TorusTopology):
+        return TorusNetwork(topo, **kw)
+    return HopNetwork(topo, **kw)

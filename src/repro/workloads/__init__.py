@@ -1,1 +1,4 @@
 from repro.workloads.patterns import (WORKLOADS, Workload, get_workload)
+from repro.workloads.arrivals import (JobSpec, burst_stream,
+                                      mixed_size_factory, poisson_stream,
+                                      replicated, serial_stream)

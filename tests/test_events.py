@@ -1,0 +1,121 @@
+import numpy as np
+import pytest
+
+from repro.cluster.failures import (CompositeProcess, CorrelatedOutages,
+                                    ExponentialLifetimes, WeibullLifetimes,
+                                    contiguous_racks)
+from repro.sim.events import Event, EventQueue, EventType
+
+
+def test_pop_orders_by_time():
+    q = EventQueue()
+    q.push(3.0, EventType.SUBMIT, tag="c")
+    q.push(1.0, EventType.SUBMIT, tag="a")
+    q.push(2.0, EventType.SUBMIT, tag="b")
+    assert [e["tag"] for e in q.drain()] == ["a", "b", "c"]
+
+
+def test_equal_timestamp_type_priority():
+    """At one instant: COMPLETE < FAILURE < RECOVER < HEARTBEAT <
+    CHECKPOINT < SUBMIT < START, regardless of push order."""
+    q = EventQueue()
+    order = [EventType.START, EventType.SUBMIT, EventType.CHECKPOINT,
+             EventType.HEARTBEAT, EventType.RECOVER, EventType.FAILURE,
+             EventType.COMPLETE]
+    for t in order:                       # pushed in reverse priority
+        q.push(5.0, t)
+    popped = [e.type for e in q.drain()]
+    assert popped == sorted(order, key=int)
+    assert popped[0] == EventType.COMPLETE and popped[-1] == EventType.START
+
+
+def test_equal_time_and_type_pops_in_insertion_order():
+    q = EventQueue()
+    for i in range(10):
+        q.push(1.0, EventType.FAILURE, i=i)
+    assert [e["i"] for e in q.drain()] == list(range(10))
+
+
+def test_deterministic_across_runs():
+    def stream(seed):
+        rng = np.random.default_rng(seed)
+        q = EventQueue()
+        for _ in range(200):
+            q.push(float(rng.integers(0, 5)),
+                   EventType(int(rng.integers(0, 7))))
+        return [(e.time, e.type, e.seq) for e in q.drain()]
+    assert stream(7) == stream(7)
+
+
+def test_no_time_travel():
+    q = EventQueue()
+    q.push(2.0, EventType.SUBMIT)
+    q.pop()
+    with pytest.raises(ValueError):
+        q.push(1.0, EventType.SUBMIT)
+    q.push(2.0, EventType.SUBMIT)          # same instant is fine
+
+
+def test_peek_and_counters():
+    q = EventQueue()
+    assert q.peek() is None
+    q.push(1.0, EventType.HEARTBEAT)
+    assert q.peek().type == EventType.HEARTBEAT
+    assert (q.pushed, q.popped) == (1, 0)
+    q.pop()
+    assert (q.pushed, q.popped) == (1, 1)
+    assert q.now == 1.0
+
+
+# ------------------------------------------------------- failure processes
+def test_exponential_lifetimes_alternate_and_sort():
+    proc = ExponentialLifetimes(np.arange(4), mtbf=10.0, mttr=2.0)
+    ev = proc.generate(np.random.default_rng(0), horizon=200.0)
+    times = [e.time for e in ev]
+    assert times == sorted(times)
+    for node in range(4):
+        kinds = [e.kind for e in ev if e.nodes == (node,)]
+        # strict alternation starting with a failure
+        assert all(k == ("fail" if i % 2 == 0 else "repair")
+                   for i, k in enumerate(kinds))
+
+
+def test_exponential_permanent_failures_without_repair():
+    proc = ExponentialLifetimes(np.arange(8), mtbf=5.0, mttr=None)
+    ev = proc.generate(np.random.default_rng(1), horizon=1000.0)
+    assert all(e.kind == "fail" for e in ev)
+    assert len(ev) <= 8                      # at most one death per node
+
+
+def test_weibull_mean_matches_mtbf():
+    proc = WeibullLifetimes(np.arange(300), mtbf=50.0, shape=0.7, mttr=None)
+    ev = proc.generate(np.random.default_rng(2), horizon=1e6)
+    first = [e.time for e in ev]
+    assert np.mean(first) == pytest.approx(50.0, rel=0.15)
+
+
+def test_correlated_outages_take_whole_group():
+    racks = contiguous_racks(64, 16)
+    proc = CorrelatedOutages(racks[:2], mtbf=10.0, mttr=1.0)
+    ev = proc.generate(np.random.default_rng(3), horizon=500.0)
+    assert ev, "expected at least one outage in 50 MTBFs"
+    assert all(len(e.nodes) == 16 for e in ev)
+    frac = proc.expected_p_f(64)
+    assert frac[:32].min() > 0 and frac[32:].sum() == 0
+
+
+def test_composite_merges_sorted():
+    a = ExponentialLifetimes(np.arange(4), mtbf=7.0, mttr=1.0)
+    b = CorrelatedOutages([np.arange(4, 8)], mtbf=9.0, mttr=1.0)
+    ev = CompositeProcess([a, b]).generate(np.random.default_rng(4), 300.0)
+    times = [e.time for e in ev]
+    assert times == sorted(times)
+    assert {e.nodes for e in ev if len(e.nodes) == 4}
+
+
+def test_contiguous_racks_partition():
+    racks = contiguous_racks(10, 4)
+    assert [len(r) for r in racks] == [4, 4, 2]
+    assert np.concatenate(racks).tolist() == list(range(10))
+    with pytest.raises(ValueError):
+        contiguous_racks(10, 0)

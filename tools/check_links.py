@@ -1,0 +1,64 @@
+#!/usr/bin/env python3
+"""Fail on broken intra-repo markdown links.
+
+    python tools/check_links.py README.md API.md docs
+
+Scans the given markdown files (directories are walked for ``*.md``) for
+``[text](target)`` links, resolves relative targets against the linking
+file, and exits 1 listing every target that does not exist.  External
+(``http(s)://``, ``mailto:``) and pure-anchor (``#...``) targets are
+skipped; a ``path#anchor`` target is checked for the path part only.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+# [text](target) — target must not contain spaces or a closing paren;
+# images (![alt](...)) are matched too via the optional leading !
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def iter_md_files(args: list[str]) -> list[pathlib.Path]:
+    out: list[pathlib.Path] = []
+    for a in args:
+        p = pathlib.Path(a)
+        if p.is_dir():
+            out += sorted(p.rglob("*.md"))
+        else:
+            out.append(p)
+    return out
+
+
+def check_file(md: pathlib.Path) -> list[str]:
+    broken = []
+    for m in LINK_RE.finditer(md.read_text(encoding="utf-8")):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        path = target.split("#", 1)[0]
+        if not path:
+            continue
+        if not (md.parent / path).exists():
+            broken.append(f"{md}: broken link -> {target}")
+    return broken
+
+
+def main(argv: list[str]) -> int:
+    files = iter_md_files(argv or ["README.md", "API.md", "docs"])
+    missing = [str(f) for f in files if not f.exists()]
+    broken = [b for f in files if f.exists() for b in check_file(f)]
+    for b in missing:
+        print(f"missing input file: {b}")
+    for b in broken:
+        print(b)
+    if broken or missing:
+        print(f"{len(broken) + len(missing)} broken link(s)")
+        return 1
+    print(f"ok: {len(files)} file(s), all intra-repo links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
