@@ -2,7 +2,9 @@
 
 Runs the scenario presets (``repro.sim.scenarios``) per policy and emits
 one CSV row per (scenario, policy) with mean job completion, makespan,
-abort and event counts.  ``--write --label <name>`` appends a point to
+abort and event counts, and the scheduler's aggregate ``place_time_s``
+(mapper wall-clock across batched ``place_many`` queue drains and
+fault-driven re-placements — the number the batched drain shrinks).  ``--write --label <name>`` appends a point to
 the committed ``benchmarks/BENCH_clustersim.json`` trajectory;
 ``--check`` exits non-zero when tofa does not beat linear on mean
 completion in the gated presets (``saturated-queue``,
@@ -40,7 +42,8 @@ def _flat_rows(name: str, out: dict) -> list[dict]:
                 makespan=row.get("makespan", row["mean_completion"]),
                 aborted_attempts=row["aborted_attempts"],
                 n_events=row["n_events"],
-                truncated=row.get("truncated", False)))
+                truncated=row.get("truncated", False),
+                place_time_s=row.get("place_time_s", 0.0)))
         else:   # drain-sweep: one row per threshold
             for th, r in row.items():
                 rows.append(dict(scenario=f"{name}/th={th}", policy=pol,
@@ -48,7 +51,8 @@ def _flat_rows(name: str, out: dict) -> list[dict]:
                                  makespan=r["makespan"],
                                  aborted_attempts=r["aborted_attempts"],
                                  n_events=r["n_events"],
-                                 truncated=r.get("truncated", False)))
+                                 truncated=r.get("truncated", False),
+                                 place_time_s=r.get("place_time_s", 0.0)))
     return rows
 
 
@@ -68,7 +72,8 @@ def run(csv=print, fast: bool | None = None, seed: int = 0) -> dict:
             csv(f"clustersim,{r['scenario']},{r['policy']},"
                 f"{r['mean_completion']:.4f},s_mean_completion,"
                 f"makespan={r['makespan']:.4f},"
-                f"aborts={r['aborted_attempts']},events={r['n_events']}")
+                f"aborts={r['aborted_attempts']},events={r['n_events']},"
+                f"place_time_s={r['place_time_s']:.4f}")
         csv(f"clustersim,{name},wall_time,{wall:.1f},s")
     for name in GATED:
         pols = summary[name]["policies"]

@@ -7,19 +7,31 @@ cached-vs-uncached comparison of fault-aware placement latency: the
 PlacementEngine derives the Eq. 1 route-weight matrix once per
 (topology, health) state, so every subsequent placement against the same
 health snapshot skips the dominant cost.
+
+``--backend jax`` (or ``run(backend="jax")``) measures the same matrix
+under the jitted jax placement backend (``repro.core.backend``) —
+placements are identical, so any wall-clock delta is pure backend cost.
 """
 from __future__ import annotations
 
+import argparse
+import sys
 import time
 
 import numpy as np
 
+from repro.core import backend as core_backend
 from repro.core.engine import PlacementEngine, PlacementRequest
 from repro.core.topology import TorusTopology
 from repro.workloads.patterns import npb_dt_like
 
 
-def run(csv=print) -> dict:
+def run(csv=print, backend: str = "numpy") -> dict:
+    with core_backend.use(backend):
+        return _run(csv=csv)
+
+
+def _run(csv=print) -> dict:
     engine = PlacementEngine()
     out = {}
     for dims, n in [((4, 4, 4), 48), ((8, 8, 8), 85), ((8, 8, 8), 256),
@@ -90,4 +102,8 @@ def _cache_ablation(csv=print, dims=(8, 8, 4), n=85, n_faulty=12,
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--backend", choices=("numpy", "jax"), default="numpy")
+    args = ap.parse_args()
+    run(backend=args.backend)
+    sys.exit(0)

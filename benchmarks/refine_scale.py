@@ -19,6 +19,15 @@ can regress against the recorded history.
         than 2x slower than the committed baseline trajectory point
         (after normalising by a machine-speed calibration, so slow or
         noisy CI runners do not fail the gate spuriously).
+
+Backend axis (the jax placement backend of ``repro.core.backend``):
+
+    ... refine_scale --backend jax            # run the matrix under jax
+    ... refine_scale --backend-bench          # numpy-vs-jax kernel duel on
+        the ``_pairwise_refine`` candidate stacks (interleaved, warm-jit);
+        exits 1 unless jax beats numpy at n >= 1024.  --write appends the
+        measured speedups to benchmarks/BENCH_backend.json; --fast trims
+        repeats for CI.
 """
 from __future__ import annotations
 
@@ -31,6 +40,7 @@ from pathlib import Path
 
 import numpy as np
 
+from repro.core import backend as core_backend
 from repro.core import mapping
 from repro.core.engine import PlacementEngine, PlacementRequest
 from repro.core.fattree import FatTreeTopology
@@ -38,6 +48,7 @@ from repro.core.topology import TorusTopology
 from repro.workloads.patterns import npb_dt_like
 
 BENCH_PATH = Path(__file__).resolve().parent / "BENCH_mapping.json"
+BACKEND_BENCH_PATH = Path(__file__).resolve().parent / "BENCH_backend.json"
 SCHEMA_VERSION = 1
 # the CI gate case (acceptance anchor): warm-cache tofa at n=256 on 8x8x8
 GATE_CASE = "torus-8x8x8/n256/healthy"
@@ -218,6 +229,114 @@ def _smoke(csv=print) -> int:
     return 0
 
 
+def _refine_stack(topo_dims: tuple[int, ...], n: int, n_cands: int
+                  ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """(G, D, candidate stack) shaped like TOFA's multi-candidate refine:
+    the DRB + snake map candidates plus seeded restart permutations."""
+    topo = TorusTopology(topo_dims)
+    wl = npb_dt_like(n, seed=3)
+    G = wl.comm.weights("volume")
+    D = topo.hop_matrix()
+    cands = mapping._map_candidates(G, np.arange(topo.n_nodes),
+                                    topo.coords_array(), D,
+                                    np.random.default_rng(0))
+    rng = np.random.default_rng(1)
+    while len(cands) < n_cands:
+        cands.append(rng.permutation(topo.n_nodes)[:n])
+    return G, D, np.stack(cands[:n_cands])
+
+
+BACKEND_CASES = [
+    # (name, torus dims, n procs, candidates, part of --fast, gated).
+    # The x10/x16 stacks mirror TOFA's real candidate counts at that
+    # scale: a healthy search refines 10 candidates (windows + ball, two
+    # map candidates each), a faulty search up to 16 (extra far-seeded
+    # balls) — the shapes the vmapped dispatch amortises across.
+    ("refine/torus-8x8x8/n256x10", (8, 8, 8), 256, 10, False, False),
+    ("refine/torus-16x16x16/n1024x1", (16, 16, 16), 1024, 1, False, False),
+    ("refine/torus-16x16x16/n1024x10", (16, 16, 16), 1024, 10, False, True),
+    ("refine/torus-16x16x16/n1024x16", (16, 16, 16), 1024, 16, True, True),
+]
+BACKEND_GATE_MIN_N = 1024
+
+
+def backend_bench(csv=print, write: bool = False, fast: bool = False,
+                  label: str | None = None) -> int:
+    """NumPy-vs-jax duel on the ``_pairwise_refine`` hot kernel.
+
+    Measures warm-jit (first jax call compiles and is discarded),
+    interleaves the two backends best-of-N so machine-load drift hits
+    both sides equally, asserts bit-identical placements and
+    equal-or-better hop-bytes, and gates: jax must beat numpy on every
+    case with n >= 1024.  The acceptance anchor is the n=1024 candidate
+    stack on the 4096-node torus — the shape TOFA's vmapped
+    multi-candidate search dispatches.
+    """
+    if not core_backend.has_jax():
+        csv("backend_bench,SKIP,jax not installed")
+        return 0
+    repeats = 2 if fast else 3
+    rows = []
+    rc = 0
+    cases = [c for c in BACKEND_CASES if c[4]] if fast else BACKEND_CASES
+    for name, dims, n, n_cands, _in_fast, gated in cases:
+        G, D, P = _refine_stack(dims, n, n_cands)
+        with core_backend.use("jax"):
+            R_jax = mapping.refine_batch(G, D, P)      # compile (cold)
+        R_np = mapping.refine_batch(G, D, P)
+        t_np, t_jax = [], []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            mapping.refine_batch(G, D, P)
+            t_np.append(time.perf_counter() - t0)
+            with core_backend.use("jax"):
+                t0 = time.perf_counter()
+                mapping.refine_batch(G, D, P)
+                t_jax.append(time.perf_counter() - t0)
+        hb_np = mapping.hop_bytes_batch(G, D, R_np)
+        hb_jax = mapping.hop_bytes_batch(G, D, R_jax)
+        identical = bool(np.array_equal(R_np, R_jax))
+        hb_ok = bool((hb_jax <= hb_np * (1 + 1e-9)).all())
+        speedup = min(t_np) / min(t_jax)
+        rows.append({
+            "case": name, "n_procs": n, "n_candidates": n_cands,
+            "n_nodes": int(np.prod(dims)),
+            "numpy_warm_s": round(min(t_np), 6),
+            "jax_warm_s": round(min(t_jax), 6),
+            "speedup": round(speedup, 2),
+            "placements_identical": identical,
+            "hop_bytes_equal_or_better": hb_ok,
+        })
+        csv(f"backend_bench,{name},speedup,{speedup:.2f},x,"
+            f"numpy={min(t_np)*1e3:.0f}ms,jax={min(t_jax)*1e3:.0f}ms,"
+            f"identical={identical},hop_bytes_ok={hb_ok}")
+        if not identical or not hb_ok:
+            csv(f"backend_bench,{name},FAIL,parity/quality violated")
+            rc = 1
+        if gated and n >= BACKEND_GATE_MIN_N and speedup <= 1.0:
+            csv(f"backend_bench,{name},FAIL,jax slower than numpy at "
+                f"n>={BACKEND_GATE_MIN_N}")
+            rc = 1
+    if write:
+        doc = {"schema": SCHEMA_VERSION,
+               "description": (
+                   "Warm-jit jax vs numpy on the _pairwise_refine hot "
+                   "kernel (candidate-stack shapes). Appended by "
+                   "benchmarks/refine_scale.py --backend-bench --write; "
+                   "CI gate: jax beats numpy on gated n>=1024 cases."),
+               "gate": {"min_n": BACKEND_GATE_MIN_N, "factor": 1.0},
+               "trajectory": []}
+        if BACKEND_BENCH_PATH.exists():
+            doc = json.loads(BACKEND_BENCH_PATH.read_text())
+        doc["trajectory"].append({"label": label or "unlabelled",
+                                  "calibration_s": round(_calibrate(), 6),
+                                  "cases": rows})
+        BACKEND_BENCH_PATH.write_text(json.dumps(doc, indent=2) + "\n")
+        csv(f"backend_bench,write,{BACKEND_BENCH_PATH.name},"
+            f"trajectory_points={len(doc['trajectory'])}")
+    return rc
+
+
 def run(csv=print, write: bool = False, label: str | None = None) -> dict:
     """Measure the full matrix; optionally append a trajectory point."""
     fast = bool(os.environ.get("FAST"))
@@ -255,10 +374,20 @@ def main() -> int:
                     help="append this run as a new trajectory point")
     ap.add_argument("--label", default=None,
                     help="trajectory point label (e.g. the PR name)")
+    ap.add_argument("--backend", choices=("numpy", "jax"), default="numpy",
+                    help="array backend the measured pipeline runs under")
+    ap.add_argument("--backend-bench", action="store_true",
+                    help="numpy-vs-jax duel on the refine kernel; exits 1 "
+                         "unless jax beats numpy at n >= 1024 (with --write, "
+                         "appends to BENCH_backend.json)")
     args = ap.parse_args()
-    if args.fast:
-        return _smoke()
-    run(write=args.write, label=args.label)
+    if args.backend_bench:
+        return backend_bench(write=args.write, fast=args.fast,
+                             label=args.label)
+    with core_backend.use(args.backend):
+        if args.fast:
+            return _smoke()
+        run(write=args.write, label=args.label)
     return 0
 
 

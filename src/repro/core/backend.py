@@ -1,0 +1,196 @@
+"""Pluggable array backend for the mapping hot path.
+
+The placement stack is NumPy-first: every public function takes and returns
+``np.ndarray`` and the default backend executes the hot kernels with the
+vectorized NumPy implementations in :mod:`repro.core.mapping`.  When JAX is
+installed (``pip install repro-tofa[jax]``), the ``jax`` backend routes the
+same kernels — ``hop_bytes``/``hop_bytes_batch``, ``_pairwise_refine``
+swap-gain scoring, ``select_nodes`` frontier growth, ``greedy_placement`` —
+through jit-compiled implementations (:mod:`repro.core.mapping_jax`) that
+score all candidate placements of TOFA's multi-candidate search in a single
+device dispatch and keep the per-(topology, health) distance matrices
+device-resident across placements.
+
+Selection (first match wins):
+
+* ``backend.use("jax")`` context manager (tests, benchmarks);
+* ``PlacementEngine(backend="jax")`` — the engine wraps each placement call;
+* ``REPRO_BACKEND=jax`` environment variable (read at import time);
+* default: ``numpy``.
+
+Dtype policy: the NumPy kernels are pinned to float64 (the committed
+quality/parity baseline).  The jax backend computes in ``float64`` by
+default — with in-tree workloads every guest weight and route distance is
+an exactly-representable integer, so the jitted kernels reproduce the NumPy
+placements *bit-for-bit* — and can be switched to ``float32``
+(``REPRO_JAX_DTYPE=float32`` or ``set_backend("jax", dtype="float32")``)
+when throughput on accelerators matters more than cross-backend parity.
+``jax.config`` handling lives here, inside the backend: float64 kernel
+calls run under a *scoped* ``jax.experimental.enable_x64`` context
+(:meth:`JaxBackend.scope`), so neither call sites nor the float32
+accelerator stack ever see mutated global JAX state.  Placements are
+integer node-id arrays on every backend (asserted in
+``tests/test_backend_diff.py``), never floats.
+
+A NumPy-only install never imports JAX: requesting the jax backend without
+the optional dependency raises :class:`BackendUnavailableError` and
+everything else keeps working with zero behavior change.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+from collections import OrderedDict
+from typing import Iterator, Optional
+
+import numpy as np
+
+
+class BackendUnavailableError(RuntimeError):
+    """Requested backend cannot be activated (missing optional dependency)."""
+
+
+class NumpyBackend:
+    """Default backend: the vectorized NumPy kernels run as-is."""
+
+    name = "numpy"
+    is_jax = False
+    dtype = "float64"          # the NumPy kernels are pinned to float64
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"<backend {self.name} dtype={self.dtype}>"
+
+
+class JaxBackend:
+    """JAX backend: jitted kernels + device-resident distance matrices.
+
+    ``dtype`` selects the compute precision of the jitted kernels
+    (placement ids stay integers regardless).  ``float64`` (default)
+    runs every kernel call and device transfer inside a *scoped*
+    ``jax.experimental.enable_x64`` context (:meth:`scope`) — the
+    process-wide ``jax_enable_x64`` flag is never touched, so the
+    accelerator stack's float32 world is unaffected by placement calls
+    and vice versa (scoped config participates in the jit cache key).
+    """
+
+    name = "jax"
+    is_jax = True
+
+    def __init__(self, dtype: str = "float64", max_cached_devices: int = 8):
+        if dtype not in ("float32", "float64"):
+            raise ValueError(f"jax backend dtype must be float32|float64, "
+                             f"got {dtype!r}")
+        try:
+            import jax  # noqa: F401  (deferred: numpy-only installs)
+        except ImportError as e:  # pragma: no cover - exercised on bare envs
+            raise BackendUnavailableError(
+                "the 'jax' placement backend needs the optional jax "
+                "dependency: pip install repro-tofa[jax]") from e
+        self.dtype = dtype
+        # host ndarray -> device array, LRU by object identity.  The engine
+        # hands the same cached D / Eq. 1 weight matrix object to every
+        # placement against one (topology, health) state, so identity is
+        # exactly the right key: one transfer per health state, then every
+        # job in the batch reuses the device-resident copy.
+        self._device: OrderedDict[int, tuple[np.ndarray, object]] = \
+            OrderedDict()
+        self._max_cached = max_cached_devices
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"<backend {self.name} dtype={self.dtype}>"
+
+    @property
+    def np_dtype(self):
+        return np.float32 if self.dtype == "float32" else np.float64
+
+    def scope(self):
+        """Context the jitted kernels run under: scoped x64 for the
+        float64 dtype policy, a no-op for float32."""
+        if self.dtype == "float64":
+            from jax.experimental import enable_x64
+            return enable_x64()
+        return contextlib.nullcontext()
+
+    def device_matrix(self, arr: np.ndarray):
+        """Device-resident copy of a host matrix, cached by identity.
+
+        The host array is kept referenced so ``id()`` cannot be recycled
+        while the cache entry lives.  Transfers happen inside
+        :meth:`scope` so float64 matrices stay float64.
+        """
+        import jax
+        key = (id(arr), self.dtype)
+        hit = self._device.get(key)
+        if hit is not None:
+            self._device.move_to_end(key)
+            return hit[1]
+        with self.scope():
+            dev = jax.device_put(np.asarray(arr, dtype=self.np_dtype))
+        self._device[key] = (arr, dev)
+        while len(self._device) > self._max_cached:
+            self._device.popitem(last=False)
+        return dev
+
+    def clear_device_cache(self) -> None:
+        self._device.clear()
+
+
+def has_jax() -> bool:
+    """True when the optional jax dependency is importable."""
+    try:
+        import jax  # noqa: F401
+        return True
+    except ImportError:
+        return False
+
+
+_NUMPY = NumpyBackend()
+_JAX: Optional[JaxBackend] = None
+
+
+def _jax_backend(dtype: Optional[str] = None) -> JaxBackend:
+    global _JAX
+    want = dtype or os.environ.get("REPRO_JAX_DTYPE", "float64")
+    if _JAX is None or _JAX.dtype != want:
+        _JAX = JaxBackend(dtype=want)
+    return _JAX
+
+
+def get_backend(name: str, dtype: Optional[str] = None):
+    """Resolve a backend by name (``numpy`` | ``jax``)."""
+    if name == "numpy":
+        return _NUMPY
+    if name == "jax":
+        return _jax_backend(dtype)
+    raise ValueError(f"unknown backend {name!r}; have: numpy, jax")
+
+
+_ACTIVE = get_backend(os.environ.get("REPRO_BACKEND", "numpy"))
+
+
+def active():
+    """The backend the mapping kernels currently dispatch to."""
+    return _ACTIVE
+
+
+def set_backend(name: str, dtype: Optional[str] = None):
+    """Set the process-wide active backend; returns the backend object."""
+    global _ACTIVE
+    _ACTIVE = get_backend(name, dtype)
+    return _ACTIVE
+
+
+@contextlib.contextmanager
+def use(name: str, dtype: Optional[str] = None) -> Iterator[object]:
+    """Scoped backend switch::
+
+        with backend.use("jax"):
+            engine.place(request)        # jitted kernels, device-resident D
+    """
+    global _ACTIVE
+    prev = _ACTIVE
+    _ACTIVE = get_backend(name, dtype)
+    try:
+        yield _ACTIVE
+    finally:
+        _ACTIVE = prev

@@ -17,13 +17,16 @@ heartbeat-reported failures invalidate a running plan.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from collections import OrderedDict
-from typing import Any, Iterable, Optional, Protocol, Sequence, runtime_checkable
+from typing import (Any, Iterable, Optional, Protocol, Sequence, Union,
+                    runtime_checkable)
 
 import numpy as np
 
+from . import backend as _backend
 from .comm_graph import CommGraph
 from .mapping import avg_dilation, hop_bytes
 from .policies import PolicyContext, available_policies, get_policy
@@ -175,8 +178,15 @@ class PlacementEngine:
     """
 
     def __init__(self, default_policy: str = "tofa",
-                 max_cached_weights: int = 16):
+                 max_cached_weights: int = 16,
+                 backend: Optional[str] = None):
+        """``backend`` pins this engine's placements to an array backend
+        (``"numpy"`` | ``"jax"``, see :mod:`repro.core.backend`): every
+        ``place``/``place_many``/``replace`` call runs inside
+        ``backend.use(...)``.  ``None`` (default) follows the process-wide
+        active backend, so existing call sites are unaffected."""
         self.default_policy = default_policy
+        self.backend = backend
         self._hops: dict[Any, np.ndarray] = {}
         self._coords: dict[Any, np.ndarray] = {}
         self._weights: OrderedDict[Any, np.ndarray] = OrderedDict()
@@ -264,10 +274,19 @@ class PlacementEngine:
                     cached_weight_matrices=len(self._weights),
                     cached_shared_dicts=len(self._shared))
 
+    def _backend_ctx(self):
+        return (_backend.use(self.backend) if self.backend is not None
+                else contextlib.nullcontext())
+
     # ----------------------------------------------------------- placement
     def place(self, request: PlacementRequest, policy: Optional[str] = None,
               *, rng: Optional[np.random.Generator] = None) -> PlacementPlan:
         """Run one registered policy against one request."""
+        with self._backend_ctx():
+            return self._place(request, policy, rng=rng)
+
+    def _place(self, request: PlacementRequest, policy: Optional[str] = None,
+               *, rng: Optional[np.random.Generator] = None) -> PlacementPlan:
         name = policy or self.default_policy
         pol = get_policy(name)
         rng = rng if rng is not None else np.random.default_rng(request.seed)
@@ -302,6 +321,62 @@ class PlacementEngine:
             out[pol] = self.place(request, policy=pol, rng=rng)
         return out
 
+    def place_many(self, requests: Sequence[PlacementRequest],
+                   policy: Union[str, Sequence[str], None] = None,
+                   *, rng: Optional[np.random.Generator] = None,
+                   exclusive: bool = False) -> list[PlacementPlan]:
+        """Batched placement: one plan per request, in request order.
+
+        Produces exactly the plans the equivalent sequence of
+        :meth:`place` calls would (differentially tested in
+        ``tests/test_backend_diff.py``) while paying batch costs once:
+        the whole batch runs inside one backend scope, so per-(topology,
+        health) hop/weight matrices, the policies' shared candidate
+        memos, and — on the jax backend — the device-resident distance
+        matrices and compiled kernels are derived or transferred a single
+        time and reused by every job in the batch.
+
+        ``policy`` is one name for the whole batch (default:
+        ``default_policy``) or one name per request (the scheduler maps
+        each job's ``srun --distribution`` here).  ``rng`` is threaded
+        through the batch in order; ``None`` gives every request its own
+        ``default_rng(request.seed)``, matching ``place``.
+
+        ``exclusive=True`` applies scheduler queue-drain semantics:
+        requests are placed in order and each is restricted to nodes no
+        earlier plan in the batch occupies (Slurm's exclusive node
+        allocation).  Raises ``ValueError`` — like the equivalent
+        sequential validation would — if a request no longer fits in
+        what remains.
+        """
+        requests = list(requests)
+        if policy is None or isinstance(policy, str):
+            policies = [policy] * len(requests)
+        else:
+            policies = list(policy)
+            if len(policies) != len(requests):
+                raise ValueError(
+                    f"{len(policies)} policies for {len(requests)} requests")
+        plans: list[PlacementPlan] = []
+        taken: dict[Any, np.ndarray] = {}   # topo key -> occupied node ids
+        with self._backend_ctx():
+            for req, pol in zip(requests, policies):
+                key = self._topo_key(req.topology)
+                if exclusive:
+                    busy = taken.get(key)
+                    if busy is not None and busy.size:
+                        avail = req.available_ids
+                        req = dataclasses.replace(
+                            req, available=avail[~np.isin(avail, busy)])
+                plan = self._place(req, policy=pol, rng=rng)
+                plans.append(plan)
+                if exclusive:
+                    prev = taken.get(key)
+                    ids = np.asarray(plan.placement, dtype=np.int64)
+                    taken[key] = (ids if prev is None
+                                  else np.concatenate([prev, ids]))
+        return plans
+
     # -------------------------------------------------------- re-placement
     def replace(self, plan: PlacementPlan,
                 failed_nodes: Sequence[int] | np.ndarray,
@@ -324,6 +399,16 @@ class PlacementEngine:
         stale once other nodes fail or drain after submission — a live
         scheduler passes its current estimates here.
         """
+        with self._backend_ctx():
+            return self._replace(plan, failed_nodes, rng=rng, full=full,
+                                 p_f=p_f, available=available)
+
+    def _replace(self, plan: PlacementPlan,
+                 failed_nodes: Sequence[int] | np.ndarray,
+                 *, rng: Optional[np.random.Generator] = None,
+                 full: bool = False,
+                 p_f: Optional[np.ndarray] = None,
+                 available: Optional[np.ndarray] = None) -> PlacementPlan:
         failed = np.unique(np.atleast_1d(np.asarray(failed_nodes,
                                                     dtype=np.int64)))
         req = plan.request

@@ -35,12 +35,41 @@ versions are retained as ``*_reference`` — they define the quality floor
 the vectorized kernels are differentially tested against
 (``tests/test_mapping_diff.py``) and the baseline ``benchmarks/refine_scale``
 measures speedups from.
+
+Backends: the hot kernels dispatch through :mod:`repro.core.backend`.
+The default ``numpy`` backend runs the implementations in this file,
+pinned to float64.  With the optional ``jax`` backend active
+(``backend.use("jax")`` / ``REPRO_BACKEND=jax`` /
+``PlacementEngine(backend="jax")``), ``hop_bytes``/``hop_bytes_batch``,
+``_pairwise_refine``, ``select_nodes`` and ``greedy_placement`` run the
+jit-compiled kernels of :mod:`repro.core.mapping_jax` — decision-identical
+at float64 (bit-identical placements for the integer-weighted in-tree
+workloads), with all candidate refinements of one mapping call batched
+into a single device dispatch.  Asymmetric guest matrices (outside the
+CommGraph convention) silently fall back to the NumPy kernels.  Inside
+``use_reference_impl`` the retained scalar loops always run, regardless
+of backend — they are the fixed baseline.
 """
 from __future__ import annotations
 
 import contextlib
 
 import numpy as np
+
+from . import backend as _backend
+
+
+def _jax_kernels(G_w: np.ndarray | None = None):
+    """The jitted kernel module when the jax backend should serve this
+    call, else None (numpy path).  ``G_w`` adds the symmetric-guest
+    check for guest-dependent kernels."""
+    be = _backend.active()
+    if not getattr(be, "is_jax", False):
+        return None
+    from . import mapping_jax
+    if G_w is not None and not mapping_jax.guest_supported(G_w):
+        return None
+    return mapping_jax
 
 
 # --------------------------------------------------------------------------
@@ -54,6 +83,9 @@ def hop_bytes(G_v: np.ndarray, D: np.ndarray, placement: np.ndarray) -> float:
     entries) this equals sum over unordered pairs of bytes * distance; an
     asymmetric route-weight matrix D is implicitly symmetrised.
     """
+    jx = _jax_kernels(G_v)
+    if jx is not None:
+        return jx.hop_bytes(G_v, D, placement)
     p = np.asarray(placement)
     return float(0.5 * (G_v * D[np.ix_(p, p)]).sum())
 
@@ -72,6 +104,9 @@ def hop_bytes_batch(
     P = np.asarray(placements)
     if P.ndim == 1:
         return np.array([hop_bytes(G_v, D, P)])
+    jx = _jax_kernels(G_v)
+    if jx is not None:
+        return jx.hop_bytes_batch(G_v, D, P)
     k, n = P.shape
     out = np.empty(k, dtype=np.float64)
     step = max(1, int(max_block_elems // max(n * n, 1)))
@@ -300,6 +335,9 @@ def select_nodes(D: np.ndarray, count: int, seed: int | None = None) -> np.ndarr
     entries are pinned to +inf, so each step is one argmin + one row add,
     with no per-step masked copy of the full N-node array.
     """
+    jx = _jax_kernels()
+    if jx is not None:
+        return jx.select_nodes(D, count, seed=seed)
     n = D.shape[0]
     count = min(count, n)
     if seed is None:
@@ -338,18 +376,47 @@ def select_nodes_reference(
     return np.flatnonzero(chosen)
 
 
+def refine_batch(G_w: np.ndarray, D: np.ndarray, placements: np.ndarray,
+                 ) -> np.ndarray:
+    """Refine a (k, n) stack of candidate placements.
+
+    On the numpy backend this loops the module-global ``_pairwise_refine``
+    (so ``use_reference_impl`` still applies); on the jax backend the
+    whole stack refines in one jitted, vmapped device dispatch.
+    """
+    P = np.stack([np.asarray(p) for p in placements]) \
+        if not isinstance(placements, np.ndarray) else placements
+    refiner = globals()["_pairwise_refine"]
+    # dispatch to the jitted batch only when the *vectorized* kernel is
+    # installed — under use_reference_impl the global is the scalar
+    # reference, which must run regardless of backend (compare against
+    # the saved original: the bare name would resolve to the same
+    # swapped global and never detect reference mode)
+    if refiner is _VECTORIZED_IMPL.get("_pairwise_refine"):
+        jx = _jax_kernels(G_w)
+        if jx is not None:
+            return jx.refine_many(G_w, D, P)
+    return np.stack([refiner(G_w, D, p) for p in P])
+
+
 def best_map(G_w, node_sets, coords, D, rng) -> np.ndarray:
     """Map onto each candidate node subset, keep the lowest hop-bytes.
 
-    All candidate placements are scored in one stacked ``hop_bytes_batch``
-    evaluation instead of k separate D gathers.
+    Candidate generation (dual recursive bipartitioning + snake seed per
+    node set) stays host-side; *all* resulting candidates are refined as
+    one ``refine_batch`` stack and scored in one ``hop_bytes_batch``
+    evaluation — on the jax backend that is a single device dispatch for
+    TOFA's entire multi-candidate search.  Equivalent to mapping each
+    set independently and keeping the best: the global argmin over
+    refined candidates is the min of the per-set minima, with the same
+    first-occurrence tie-break.
     """
-    placements = [map_graph(G_w, np.asarray(nodes), coords, D=D, rng=rng)
-                  for nodes in node_sets]
-    if len(placements) == 1:
-        return placements[0]
-    scores = hop_bytes_batch(G_w, D, np.stack(placements))
-    return placements[int(np.argmin(scores))]
+    candidates: list[np.ndarray] = []
+    for nodes in node_sets:
+        candidates += _map_candidates(G_w, np.asarray(nodes), coords, D, rng)
+    refined = refine_batch(G_w, D, np.stack(candidates))
+    scores = hop_bytes_batch(G_w, D, refined)
+    return refined[int(np.argmin(scores))]
 
 
 # --------------------------------------------------------------------------
@@ -381,6 +448,30 @@ def map_graph(
 
     Returns placement: array of node ids, one per process.
     """
+    candidates = _map_candidates(G_w, np.asarray(nodes), coords, D, rng,
+                                 portfolio=portfolio)
+    if D is None:
+        return candidates[0]
+    stack = np.stack(candidates)
+    if refine:
+        stack = refine_batch(G_w, D, stack)
+    scores = hop_bytes_batch(G_w, D, stack)
+    return stack[int(np.argmin(scores))]
+
+
+def _map_candidates(
+    G_w: np.ndarray,
+    nodes: np.ndarray,
+    coords: np.ndarray,
+    D: np.ndarray | None,
+    rng: np.random.Generator | None,
+    portfolio: bool = True,
+) -> list[np.ndarray]:
+    """Unrefined candidate placements of one (guest, node set) mapping:
+    dual recursive bipartitioning, plus (with ``D`` and ``portfolio``)
+    the sequential snake seed.  Shared by :func:`map_graph` and
+    :func:`best_map` so multi-set searches can refine every candidate in
+    one batch."""
     n = G_w.shape[0]
     nodes = np.asarray(nodes)
     assert len(nodes) >= n, "not enough nodes"
@@ -408,17 +499,13 @@ def map_graph(
     rec(np.arange(n), nodes)
 
     if D is None:
-        return placement
-
+        return [placement]
     candidates = [placement]
     if portfolio:
         # sequential seed: process i -> i-th node along a snake curve of the
         # available nodes (near-optimal chain for banded guests)
         candidates.append(snake_order(nodes, coords)[:n].copy())
-    if refine:
-        candidates = [_pairwise_refine(G_w, D, c) for c in candidates]
-    scores = hop_bytes_batch(G_w, D, np.stack(candidates))
-    return candidates[int(np.argmin(scores))]
+    return candidates
 
 
 def _pairwise_refine(
@@ -448,11 +535,19 @@ def _pairwise_refine(
     descend at least as far as the scalar reference, which stops after
     ``max_passes`` regardless.  A pass that accepts no swap leaves all state
     unchanged, so the first such pass terminates refinement.
+
+    Mover order uses a *stable* descending sort so the swap sequence is a
+    deterministic function of the inputs — the contract the jax backend's
+    decision-identical port (:mod:`repro.core.mapping_jax`) relies on.
     """
     p = placement.copy()
     n = len(p)
     if n <= 1:
         return p
+    jx = _jax_kernels(G_w)
+    if jx is not None:
+        return jx.pairwise_refine(G_w, D, p, max_passes=max_passes,
+                                  movers=movers, extra_passes=extra_passes)
     G = G_w
     if np.count_nonzero(np.diagonal(G)):
         G = G.copy()
@@ -470,7 +565,10 @@ def _pairwise_refine(
 
     for _ in range(max_passes + extra_passes):
         improved = False
-        order = np.argsort(contrib)[::-1][: min(n, movers)]  # worst offenders
+        # worst offenders first; stable descending (ties keep index order)
+        # so the swap sequence is deterministic and exactly replicable by
+        # the jax port
+        order = np.argsort(-contrib, kind="stable")[: min(n, movers)]
         for i in order:
             gains = (contrib[i] + contrib - 2.0 * C[i]
                      - M @ G[i] - G @ M[i])
@@ -517,7 +615,9 @@ def _pairwise_refine_reference(
         # cost contribution of each process: c_i = sum_j G_w[i,j] D[p_i, p_j]
         Dp = D[np.ix_(p, p)]
         contrib = (G_w * Dp).sum(axis=1)
-        order = np.argsort(contrib)[::-1][: min(n, 64)]  # worst offenders
+        # worst offenders, stable descending — same deterministic mover
+        # order as the vectorized kernel so the comparison stays paired
+        order = np.argsort(-contrib, kind="stable")[: min(n, 64)]
         for i in order:
             best_d, best_j = 0.0, -1
             mask = np.ones(n, dtype=bool)
@@ -598,12 +698,17 @@ def greedy_placement(
     and sorted the full O(n^2) pair list), and the free-node frontier is a
     maintained id array — nearest-free is an argmin over the shrinking
     frontier, not a masked scan of the full N-node topology per step.
+    Pair order is a stable descending sort (ties keep upper-triangle
+    order), the deterministic contract shared with the jax port.
     """
+    jx = _jax_kernels()
+    if jx is not None:
+        return jx.greedy_placement(G_w, nodes, D)
     n = G_w.shape[0]
     nodes = np.asarray(nodes)
     iu = np.triu_indices(n, 1)
     w = G_w[iu]
-    order = np.argsort(w)[::-1]
+    order = np.argsort(-w, kind="stable")
     order = order[w[order] > 0]   # reference stops at the first <= 0 pair
     pair_i, pair_j = iu[0][order], iu[1][order]
 
@@ -641,7 +746,7 @@ def greedy_placement_reference(
     n = G_w.shape[0]
     nodes = np.asarray(nodes)
     iu = np.triu_indices(n, 1)
-    order = np.argsort(G_w[iu])[::-1]
+    order = np.argsort(-G_w[iu], kind="stable")
     pairs = list(zip(iu[0][order], iu[1][order]))
 
     placement = np.full(n, -1, dtype=np.int64)

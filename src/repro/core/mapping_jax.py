@@ -1,0 +1,486 @@
+"""JIT-compiled JAX implementations of the mapping hot kernels.
+
+This module is only imported when the ``jax`` backend is active
+(:mod:`repro.core.backend`); a NumPy-only install never reaches it.  Every
+public function mirrors its :mod:`repro.core.mapping` counterpart —
+NumPy arrays in, NumPy arrays out — and is **decision-identical** to it:
+with the in-tree workloads all guest weights and route distances are
+exactly-representable integers, float64 arithmetic on them is exact, and
+the kernels below are algebraic rearrangements of the NumPy expressions,
+so for ``dtype="float64"`` the same swaps are accepted in the same order
+and the returned placements match the NumPy backend bit-for-bit
+(``tests/test_backend_diff.py``).
+
+What the port changes is the *cost model*, not the algorithm:
+
+* **Swap-gain scoring is gather+matvec, not dense matvec.**  The guest
+  graphs of interest are sparse (NPB-DT at n=1024 has ~3 edges per rank),
+  so the per-mover gains row
+
+      gains = contrib[i] + contrib - 2*C[i] - M @ G[i] - G @ M[i]
+
+  is evaluated from the CSR-padded rows of ``G`` in O(n*k) — a k-column
+  gather of ``M`` and a k-wide weighted sum — instead of two O(n^2)
+  matvecs.  Products against explicit zeros contribute exactly 0.0, so
+  the sparse evaluation is bit-equal to the dense one.  Guests denser
+  than half-full fall back to a dense-matvec variant of the same loop
+  (routed through :mod:`repro.kernels.swap_gain` so TPU runs can use the
+  Pallas kernel).
+* **All candidates refine in one dispatch.**  ``refine_many`` vmaps the
+  refinement loop over a stack of candidate placements (TOFA's windows,
+  balls and snake seeds), replacing the per-candidate Python loop with a
+  single device call.  Converged candidates are naturally idempotent
+  (no improving swap exists), so the batched loop runs until the last
+  candidate converges without perturbing the others.
+* **Distance matrices are device-resident.**  Hosts hand the same cached
+  (topology, health) matrix object to every placement, and the backend
+  keeps its symmetrised device copy alive across jobs, so a batch of
+  placements pays one transfer.
+* **Shapes are padded to powers of two** (process count, sparse row
+  width, candidate count) with masked tails, so mixed job sizes reuse a
+  small set of compiled kernels instead of recompiling per size.
+"""
+from __future__ import annotations
+
+import functools
+from collections import OrderedDict
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import backend as _backend
+
+# swap acceptance threshold — identical to the NumPy kernel
+_GAIN_EPS = 1e-9
+
+
+# --------------------------------------------------------------------------
+# host-side preparation (sparse structure, symmetrised distances, padding)
+# --------------------------------------------------------------------------
+
+def _pow2(x: int) -> int:
+    return 1 << max(0, int(x - 1)).bit_length() if x > 1 else 1
+
+
+class _IdLRU:
+    """Tiny identity-keyed LRU holding host intermediates alive."""
+
+    def __init__(self, maxlen: int = 8):
+        self._d: OrderedDict[int, tuple] = OrderedDict()
+        self._maxlen = maxlen
+
+    def get(self, key_obj, fn):
+        key = id(key_obj)
+        hit = self._d.get(key)
+        if hit is not None and hit[0] is key_obj:
+            self._d.move_to_end(key)
+            return hit[1]
+        out = fn()
+        self._d[key] = (key_obj, out)   # strong ref pins id()
+        while len(self._d) > self._maxlen:
+            self._d.popitem(last=False)
+        return out
+
+
+_SPARSE_CACHE = _IdLRU()
+_SYM_CACHE = _IdLRU()
+_GUEST_OK_CACHE = _IdLRU(maxlen=32)
+_SPARSE_DEV_CACHE = _IdLRU()
+
+
+def guest_supported(G_w: np.ndarray) -> bool:
+    """The jitted kernels assume the symmetric-guest convention
+    (CommGraph accumulates both directions); asymmetric guests fall back
+    to the NumPy kernels at the dispatch layer.  Cached by identity —
+    the same guest matrix is scored/refined many times per placement."""
+    return _GUEST_OK_CACHE.get(
+        G_w, lambda: bool(np.array_equal(G_w, G_w.T)))
+
+
+def _sparse_rows(G_w: np.ndarray) -> tuple[np.ndarray, np.ndarray, int]:
+    """CSR-padded rows of the (diag-zeroed) guest: (idx, val, k_pad).
+
+    Rows are padded to a power-of-two width with (index 0, weight 0.0)
+    entries — gathers against them multiply by exactly 0.0, so padding
+    never changes a result.
+    """
+    def build():
+        G = np.asarray(G_w, dtype=np.float64)
+        if np.count_nonzero(np.diagonal(G)):
+            G = G.copy()
+            np.fill_diagonal(G, 0.0)
+        n = G.shape[0]
+        nnz = (G != 0.0).sum(axis=1)
+        # multiple-of-4 width: tight enough that padded gathers stay
+        # cheap, coarse enough that compile-cache keys rarely vary
+        k_true = max(1, int(nnz.max()) if n else 1)
+        k = min(_pow2(n), (k_true + 3) & ~3)
+        idx = np.zeros((n, k), dtype=np.int32)
+        val = np.zeros((n, k), dtype=np.float64)
+        for r in range(n):
+            cols = np.flatnonzero(G[r])
+            idx[r, :len(cols)] = cols
+            val[r, :len(cols)] = G[r, cols]
+        return idx, val, k, G
+    return _SPARSE_CACHE.get(G_w, build)
+
+
+def _sym_host(D: np.ndarray) -> np.ndarray:
+    """0.5*(D + D.T), cached by identity — the symmetrised route-weight
+    view every gathered-distance expression in the NumPy kernel uses."""
+    return _SYM_CACHE.get(
+        D, lambda: 0.5 * (np.asarray(D, np.float64)
+                          + np.asarray(D, np.float64).T))
+
+
+def _be():
+    be = _backend.active()
+    if not getattr(be, "is_jax", False):   # direct calls outside dispatch
+        be = _backend.get_backend("jax")
+    return be
+
+
+def _pad_placements(placements: np.ndarray) -> tuple[np.ndarray, int, int]:
+    """(B, n) -> zero-padded (B_pad?, n_pad) int32 plus original n."""
+    P = np.asarray(placements, dtype=np.int32)
+    B, n = P.shape
+    n_pad = _pow2(n)
+    if n_pad != n:
+        P = np.pad(P, ((0, 0), (0, n_pad - n)))
+    return P, n, n_pad
+
+
+# --------------------------------------------------------------------------
+# pairwise-swap refinement (the swap-gain kernel)
+# --------------------------------------------------------------------------
+
+def _refine_one(p0, idx, val, G_dense, Ds, n_valid, *, movers: int,
+                total_passes: int, dense: bool):
+    """Refine ONE placement; decision-identical to the NumPy loop.
+
+    ``p0`` (n,) int32 node ids (tail >= n_valid is masked padding),
+    ``idx``/``val`` (n, k) CSR-padded guest rows, ``G_dense`` (n, n) or
+    a (1, 1) placeholder when the sparse path runs, ``Ds`` (N, N)
+    symmetrised device-resident distances, ``n_valid`` traced scalar.
+    """
+    n = p0.shape[0]
+    rows = jnp.arange(n, dtype=jnp.int32)
+    valid = rows < n_valid
+    fdt = Ds.dtype
+
+    M0 = Ds[p0[:, None], p0[None, :]]                       # (n, n) gather
+    contrib0 = (val.astype(fdt)
+                * jnp.take_along_axis(M0, idx, axis=1)).sum(-1)
+
+    def gains_at(M, contrib, i):
+        """gains = contrib[i] + contrib - 2*C[i] - M@G[i] - G@M[i]."""
+        if dense:
+            from repro.kernels.swap_gain.ops import swap_gain
+            g = swap_gain(M, G_dense, contrib, i)
+        else:
+            # M is kept exactly symmetric, so every column read below is
+            # a (contiguous) row read instead
+            idx_i, val_i = idx[i], val[i].astype(fdt)
+            Mrow_i = M[i]
+            a = val_i @ M[idx_i, :]                          # M @ G[i]
+            b = (val.astype(fdt)
+                 * Mrow_i[idx]).sum(-1)                      # G @ M[i]
+            Ci = jnp.zeros(n, fdt).at[idx_i].add(val_i * Mrow_i[idx_i])
+            g = contrib[i] + contrib - 2.0 * Ci - a - b
+        g = g.at[i].set(0.0)
+        return jnp.where(valid, g, -jnp.inf)
+
+    def sparse_col(i):
+        """Nonzero structure of G[:, i] (symmetric guest): row i's."""
+        return idx[i], val[i].astype(fdt)
+
+    def mover_step(t, s):
+        p, M, contrib, improved, order = s
+        i = order[t]
+        gains = gains_at(M, contrib, i)
+        j_raw = jnp.argmax(gains)
+        do = (i < n_valid) & (gains[j_raw] > _GAIN_EPS)
+        # rejected movers run an *identity swap* (j := i): the M updates
+        # below then rewrite rows with their current exact values, so no
+        # O(n^2) masked select of M is ever needed and XLA keeps the
+        # loop-carried matrix in place.
+        j = jnp.where(do, j_raw, i)
+
+        oi, oj = p[i], p[j]
+        p_old = p
+        p = p.at[jnp.stack([i, j])].set(jnp.stack([oj, oi]))
+        # every M entry is a directly gathered Ds value (never
+        # accumulated), so the pre-swap rows are re-gathered from Ds
+        # instead of read out of M — M stays *write-only* in this
+        # section, which is what lets XLA update it in place rather than
+        # copying the matrix once per mover
+        row_i = Ds[oj][p]                        # gathered_row(p[i])
+        row_j = Ds[oi][p]
+        M = (M.at[i, :].set(row_i).at[:, i].set(row_i)
+              .at[j, :].set(row_j).at[:, j].set(row_j))
+        M = M.at[jnp.stack([i, j]), jnp.stack([j, i])].set(
+            jnp.stack([row_i[j], row_i[j]]))
+        if dense:
+            old_row_i = Ds[oi][p_old]
+            old_row_j = Ds[oj][p_old]
+            c1 = contrib + (G_dense[i] * (row_i - old_row_i)
+                            + G_dense[j] * (row_j - old_row_j))
+            c1 = c1.at[i].set((G_dense[i] * row_i).sum())
+            c1 = c1.at[j].set((G_dense[j] * row_j).sum())
+        else:
+            ii, vi = sparse_col(i)
+            ij_, vj = sparse_col(j)
+            # the sparse delta only needs the old rows at the k nonzero
+            # columns — gather those few entries instead of full rows
+            old_i_k = Ds[oi][p_old[ii]]
+            old_j_k = Ds[oj][p_old[ij_]]
+            # delta built separately then added, matching the NumPy
+            # fused-expression summation order bit for bit
+            delta = jnp.zeros(n, fdt).at[ii].add(vi * (row_i[ii]
+                                                       - old_i_k))
+            delta = delta.at[ij_].add(vj * (row_j[ij_] - old_j_k))
+            c1 = contrib + delta
+            c1 = c1.at[jnp.stack([i, j])].set(
+                jnp.stack([(vi * row_i[ii]).sum(),
+                           (vj * row_j[ij_]).sum()]))
+        # contrib accumulates across swaps, so a rejected mover must keep
+        # the accumulated values exactly — an O(n) select, unlike M
+        contrib = jnp.where(do, c1, contrib)
+        return p, M, contrib, improved | do, order
+
+    def pass_body(state):
+        p, M, contrib, stop, t = state
+        key = jnp.where(valid, contrib, -jnp.inf)
+        order = jnp.argsort(-key)[:movers].astype(jnp.int32)
+        p, M, contrib, improved, _ = lax.fori_loop(
+            0, movers, mover_step, (p, M, contrib, jnp.bool_(False), order))
+        return p, M, contrib, ~improved, t + 1
+
+    def cond(state):
+        _, _, _, stop, t = state
+        return (t < total_passes) & ~stop
+
+    p, _, _, _, _ = lax.while_loop(
+        cond, pass_body, (p0, M0, contrib0, jnp.bool_(False),
+                          jnp.int32(0)))
+    return p
+
+
+@functools.lru_cache(maxsize=32)
+def _refine_jit(movers: int, total_passes: int, dense: bool):
+    fn = functools.partial(_refine_one, movers=movers,
+                           total_passes=total_passes, dense=dense)
+    batched = jax.vmap(fn, in_axes=(0, None, None, None, None, None))
+    return jax.jit(batched)
+
+
+def refine_many(G_w: np.ndarray, D: np.ndarray, placements: np.ndarray,
+                max_passes: int = 3, movers: int = 64,
+                extra_passes: int = 13) -> np.ndarray:
+    """Batched ``_pairwise_refine``: (B, n) placements in one dispatch."""
+    be = _be()
+    P, n, n_pad = _pad_placements(np.atleast_2d(placements))
+    with be.scope():
+        idx, val, G_dense, dense = _guest_device(G_w, n_pad, be)
+        Ds = be.device_matrix(_sym_host(D))
+        movers_eff = min(movers, n_pad)
+        run = _refine_jit(movers_eff, max_passes + extra_passes, dense)
+        out = run(jnp.asarray(P), idx, val, G_dense, Ds, jnp.int32(n))
+    out = np.asarray(out)[:, :n].astype(np.int64)
+    return out if np.asarray(placements).ndim == 2 else out[0]
+
+
+def _guest_device(G_w: np.ndarray, n_pad: int, be):
+    """Device-resident guest structure (idx, val, G_dense, is_dense),
+    cached by guest identity so repeated refine/score calls against one
+    job's graph pay a single transfer."""
+    def build():
+        idx, val, k, _G = _sparse_rows(G_w)
+        n = idx.shape[0]
+        if n_pad != n:
+            idx = np.pad(idx, ((0, n_pad - n), (0, 0)))
+            val = np.pad(val, ((0, n_pad - n), (0, 0)))
+        dense = k > max(8, n_pad // 2)
+        fdt = be.np_dtype
+        Gd = _G
+        if dense and n_pad != n:
+            Gd = np.pad(Gd, ((0, n_pad - n), (0, n_pad - n)))
+        G_dense = (jnp.asarray(Gd, dtype=fdt) if dense
+                   else jnp.zeros((1, 1), dtype=fdt))
+        return (jnp.asarray(idx), jnp.asarray(val, dtype=fdt),
+                G_dense, dense)
+    key_holder = _sparse_rows(G_w)    # one entry per guest object
+    cache = _SPARSE_DEV_CACHE.get(key_holder, dict)
+    sub = (n_pad, be.dtype)
+    if sub not in cache:
+        cache[sub] = build()
+    return cache[sub]
+
+
+def pairwise_refine(G_w: np.ndarray, D: np.ndarray, placement: np.ndarray,
+                    max_passes: int = 3, movers: int = 64,
+                    extra_passes: int = 13) -> np.ndarray:
+    """Drop-in for :func:`repro.core.mapping._pairwise_refine`."""
+    return refine_many(G_w, D, np.asarray(placement)[None, :],
+                       max_passes=max_passes, movers=movers,
+                       extra_passes=extra_passes)[0]
+
+
+# --------------------------------------------------------------------------
+# hop-bytes scoring
+# --------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=8)
+def _hop_bytes_jit():
+    def score(P, idx, val, Ds, n_valid):
+        def one(p):
+            tgt = p[idx]                       # (n, k) partner node ids
+            d = Ds[p[:, None], tgt]            # gathered distances
+            ok = jnp.arange(p.shape[0])[:, None] < n_valid
+            return 0.5 * jnp.where(ok, val * d, 0.0).sum()
+        return jax.vmap(one)(P)
+    return jax.jit(score)
+
+
+def hop_bytes_batch(G_w: np.ndarray, D: np.ndarray,
+                    placements: np.ndarray) -> np.ndarray:
+    """Batched hop-bytes on device; bit-equal to the NumPy gather."""
+    be = _be()
+    P2 = np.atleast_2d(np.asarray(placements))
+    P, n, n_pad = _pad_placements(P2)
+    with be.scope():
+        idx, val, _Gd, _dense = _guest_device(G_w, n_pad, be)
+        Ds = be.device_matrix(_sym_host(D))
+        out = _hop_bytes_jit()(jnp.asarray(P), idx, val, Ds, jnp.int32(n))
+    return np.asarray(out, dtype=np.float64)
+
+
+def hop_bytes(G_w: np.ndarray, D: np.ndarray, placement: np.ndarray) -> float:
+    return float(hop_bytes_batch(G_w, D, np.asarray(placement)[None, :])[0])
+
+
+# --------------------------------------------------------------------------
+# node-subset selection (frontier growth)
+# --------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=8)
+def _select_jit():
+    def grow(Ddev, seed, count):
+        N = Ddev.shape[0]
+        chosen0 = jnp.zeros(N, bool).at[seed].set(True)
+        cost0 = Ddev[seed].at[seed].set(jnp.inf)
+
+        def step(_, s):
+            chosen, cost = s
+            nxt = jnp.argmin(cost)
+            return chosen.at[nxt].set(True), (cost + Ddev[nxt]).at[nxt].set(
+                jnp.inf)
+
+        chosen, _ = lax.fori_loop(0, count - 1, step, (chosen0, cost0))
+        return chosen
+    return jax.jit(grow)
+
+
+def select_nodes(D: np.ndarray, count: int,
+                 seed: int | None = None) -> np.ndarray:
+    """Drop-in for :func:`repro.core.mapping.select_nodes` — the O(N^2)
+    seed search stays on host (one partition, same arithmetic as NumPy);
+    the sequential frontier growth runs jitted on device."""
+    n = D.shape[0]
+    count = min(count, n)
+    if seed is None:
+        part = np.partition(D, count - 1, axis=1)[:, :count]
+        seed = int(np.argmin(part.sum(axis=1)))
+    be = _be()
+    with be.scope():
+        Ddev = be.device_matrix(np.asarray(D, dtype=np.float64))
+        chosen = _select_jit()(Ddev, jnp.int32(seed), jnp.int32(count))
+    return np.flatnonzero(np.asarray(chosen)).astype(np.int64)
+
+
+# --------------------------------------------------------------------------
+# greedy pair placement (paper baseline)
+# --------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=8)
+def _greedy_jit():
+    def run(pair_i, pair_j, pair_ok, Ddev, free0, placement0):
+        def nearest_free(free, anchor):
+            return jnp.argmin(jnp.where(free, Ddev[anchor], jnp.inf))
+
+        def step(t, s):
+            placement, free = s
+            i, j, ok = pair_i[t], pair_j[t], pair_ok[t]
+            pi, pj = placement[i], placement[j]
+
+            def both(args):
+                placement, free = args
+                a = jnp.argmax(free)                  # first free id
+                free = free.at[a].set(False)
+                b = nearest_free(free, a)
+                free = free.at[b].set(False)
+                return (placement.at[i].set(a.astype(jnp.int32))
+                        .at[j].set(b.astype(jnp.int32)), free)
+
+            def only_i(args):
+                placement, free = args
+                a = nearest_free(free, pj)
+                return (placement.at[i].set(a.astype(jnp.int32)),
+                        free.at[a].set(False))
+
+            def only_j(args):
+                placement, free = args
+                b = nearest_free(free, pi)
+                return (placement.at[j].set(b.astype(jnp.int32)),
+                        free.at[b].set(False))
+
+            def nothing(args):
+                return args
+
+            case = jnp.where(
+                ~ok | ((pi >= 0) & (pj >= 0)), 0,
+                jnp.where((pi < 0) & (pj < 0), 1,
+                          jnp.where(pi < 0, 2, 3)))
+            return lax.switch(case, [nothing, both, only_i, only_j],
+                              (placement, free))
+
+        return lax.fori_loop(0, pair_i.shape[0], step, (placement0, free0))
+    return jax.jit(run)
+
+
+def greedy_placement(G_w: np.ndarray, nodes: np.ndarray,
+                     D: np.ndarray) -> np.ndarray:
+    """Drop-in for :func:`repro.core.mapping.greedy_placement`: the
+    traffic-sorted pair list is built on host (identical ordering), the
+    frontier loop runs jitted against the device-resident distances."""
+    n = G_w.shape[0]
+    nodes = np.asarray(nodes)
+    iu = np.triu_indices(n, 1)
+    w = np.asarray(G_w)[iu]
+    order = np.argsort(-w, kind="stable")
+    order = order[w[order] > 0]
+    m = len(order)
+    m_pad = _pow2(max(1, m))
+    pair_i = np.zeros(m_pad, dtype=np.int32)
+    pair_j = np.zeros(m_pad, dtype=np.int32)
+    pair_ok = np.zeros(m_pad, dtype=bool)
+    pair_i[:m] = iu[0][order]
+    pair_j[:m] = iu[1][order]
+    pair_ok[:m] = True
+
+    be = _be()
+    free0 = np.zeros(D.shape[0], dtype=bool)
+    free0[np.unique(nodes)] = True
+    with be.scope():
+        Ddev = be.device_matrix(np.asarray(D, dtype=np.float64))
+        placement, free = _greedy_jit()(
+            jnp.asarray(pair_i), jnp.asarray(pair_j), jnp.asarray(pair_ok),
+            Ddev, jnp.asarray(free0), jnp.full(n, -1, dtype=jnp.int32))
+    placement = np.asarray(placement).astype(np.int64)
+    free_ids = np.flatnonzero(np.asarray(free))
+    rem = np.flatnonzero(placement < 0)
+    placement[rem] = free_ids[:len(rem)]
+    return placement

@@ -1,0 +1,71 @@
+"""Swap-gain gather+matvec — Pallas TPU kernel.
+
+The refiner's dense gains row needs two matvecs against the mover's
+guest and distance rows plus a fused elementwise combine.  Unfused, XLA
+materialises both matvec results and three temporaries in HBM; the
+kernel tiles ``M`` and ``G`` into row blocks resident in VMEM, keeps the
+mover's rows (``Mi``, ``Gi``) broadcast to every block, and emits the
+combined gains row with one read of each matrix and one write.
+
+The mover's rows are dynamic-sliced out on the host side (the *gather*
+half of the op); the kernel is the matvec+combine half.  ``Mi``/``Gi``
+are fed twice — once full-width for the dot products, once as the
+current column block for the fused elementwise term — so the kernel body
+needs no dynamic gathers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _swap_gain_kernel(m_ref, g_ref, mi_ref, gi_ref, mib_ref, gib_ref,
+                      c_ref, ci_ref, o_ref):
+    a = jnp.dot(m_ref[...], gi_ref[0, :],
+                preferred_element_type=m_ref.dtype)      # (M @ G[i])[block]
+    b = jnp.dot(g_ref[...], mi_ref[0, :],
+                preferred_element_type=m_ref.dtype)      # (G @ M[i])[block]
+    o_ref[0, :] = (ci_ref[0, 0] + c_ref[0, :]
+                   - 2.0 * gib_ref[0, :] * mib_ref[0, :] - a - b)
+
+
+def swap_gain_tpu(M, G, contrib, i, block_rows: int = 256,
+                  interpret: bool = False):
+    """gains (n,) for mover ``i``; see :mod:`.ref` for the formula."""
+    n = M.shape[0]
+    block_rows = min(block_rows, n)
+    pad = (-n) % block_rows
+    Mi = jax.lax.dynamic_slice_in_dim(M, i, 1, axis=0)      # (1, n)
+    Gi = jax.lax.dynamic_slice_in_dim(G, i, 1, axis=0)
+    ci = jax.lax.dynamic_slice_in_dim(contrib, i, 1)
+    if pad:
+        # square zero-padding: the extra K-dim zeros contribute exactly
+        # nothing to the dots, and padded gain rows are sliced off
+        M = jnp.pad(M, ((0, pad), (0, pad)))
+        G = jnp.pad(G, ((0, pad), (0, pad)))
+        contrib = jnp.pad(contrib, (0, pad))
+        Mi = jnp.pad(Mi, ((0, 0), (0, pad)))
+        Gi = jnp.pad(Gi, ((0, 0), (0, pad)))
+    np_ = M.shape[0]
+    grid = (np_ // block_rows,)
+
+    out = pl.pallas_call(
+        _swap_gain_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, np_), lambda r: (r, 0)),   # M rows
+            pl.BlockSpec((block_rows, np_), lambda r: (r, 0)),   # G rows
+            pl.BlockSpec((1, np_), lambda r: (0, 0)),            # Mi full
+            pl.BlockSpec((1, np_), lambda r: (0, 0)),            # Gi full
+            pl.BlockSpec((1, block_rows), lambda r: (0, r)),     # Mi block
+            pl.BlockSpec((1, block_rows), lambda r: (0, r)),     # Gi block
+            pl.BlockSpec((1, block_rows), lambda r: (0, r)),     # contrib
+            pl.BlockSpec((1, 1), lambda r: (0, 0)),              # contrib[i]
+        ],
+        out_specs=pl.BlockSpec((1, block_rows), lambda r: (0, r)),
+        out_shape=jax.ShapeDtypeStruct((1, np_), M.dtype),
+        interpret=interpret,
+    )(M, G, Mi, Gi, Mi, Gi,
+      contrib.reshape(1, np_), ci.reshape(1, 1))
+    return out[0, :n]

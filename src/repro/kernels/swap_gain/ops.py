@@ -1,0 +1,25 @@
+"""swap_gain — jit'd public wrapper with backend dispatch."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.swap_gain.ref import swap_gain_ref
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def swap_gain(M, G, contrib, i, *, impl: str = "auto"):
+    """Dense gains row of the pairwise-swap refiner for mover ``i``.
+
+    ``impl="auto"`` runs the Pallas kernel on TPU and the jitted-jnp
+    reference everywhere else (the fallback contract of the mapping
+    backend's dense path).
+    """
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl in ("pallas", "pallas_interpret"):
+        from repro.kernels.swap_gain.kernel import swap_gain_tpu
+        return swap_gain_tpu(M, G, contrib, i,
+                             interpret=(impl == "pallas_interpret"))
+    return swap_gain_ref(M, G, contrib, i)

@@ -1,0 +1,23 @@
+"""Swap-gain oracle — the dense gains row of the pairwise-swap refiner.
+
+For mover ``i`` over a placement with gathered pairwise distances ``M``
+and guest weights ``G`` (``contrib = (G * M).sum(1)``), the gain of
+swapping ``i`` with every other process ``j`` is
+
+    gains = contrib[i] + contrib - 2 * G[i] * M[i] - M @ G[i] - G @ M[i]
+
+(the i<->j mutual term cancels because swapping endpoints preserves
+their own distance).  This is the jitted-JAX fallback the Pallas kernel
+is differentially tested against, and the dense-guest path of
+:mod:`repro.core.mapping_jax` routes through it off-TPU.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def swap_gain_ref(M, G, contrib, i):
+    """(n, n), (n, n), (n,), scalar index -> (n,) gains row."""
+    Mi, Gi = M[i], G[i]
+    return (contrib[i] + contrib - 2.0 * Gi * Mi
+            - M @ Gi - G @ Mi)

@@ -10,6 +10,13 @@ drive the outage estimator, nodes fail and are repaired *over time*
 aborts the jobs holding the node, re-places them incrementally
 (``engine.replace``) and restarts them from their latest checkpoint.
 
+Every queue-drain tick (SUBMIT / COMPLETE / RECOVER / HEARTBEAT
+handlers) places all runnable queued jobs with **one batched**
+:meth:`~repro.core.engine.PlacementEngine.place_many` call in exclusive
+mode, so a drain shares one backend scope and one set of cached
+(topology, health) matrices across the jobs it starts; the cumulative
+mapper wall-clock is reported as :attr:`SimResult.place_time_s`.
+
 Event semantics (tie-breaks in :class:`~repro.sim.events.EventType`):
 
 =========== ===============================================================
@@ -124,6 +131,9 @@ class SimResult:
     node_failures: int
     truncated: bool                 # hit max_events before all jobs finished
     trace: list[tuple[float, str, str]]
+    place_time_s: float = 0.0       # mapper wall-clock the scheduler spent
+                                    # placing/re-placing this run's jobs
+                                    # (0 for fixed-placement streams)
 
     @property
     def finished_jobs(self) -> list[JobStats]:
@@ -186,6 +196,7 @@ class ClusterSim:
             raise ValueError("first job of a stream cannot chain")
         self._by_slurm: dict[int, _SimJob] = {}
         self._down_count = np.zeros(scheduler.topo.n_nodes, dtype=np.int64)
+        self._place_time_t0 = scheduler.place_time_s   # shared-scheduler base
         self._done = 0
         self._node_failures = 0        # actual up -> down transitions
         self._trace: list[tuple[float, str, str]] = []
@@ -240,6 +251,7 @@ class ClusterSim:
             node_failures=self._node_failures,
             truncated=truncated or self._done < len(self.jobs),
             trace=self._trace,
+            place_time_s=self.sch.place_time_s - self._place_time_t0,
         )
 
     # ------------------------------------------------------------ handlers

@@ -79,6 +79,7 @@ def _row(res: SimResult) -> dict:
         "n_events": res.n_events,
         "node_failures": res.node_failures,
         "truncated": res.truncated,
+        "place_time_s": res.place_time_s,
     }
 
 
@@ -115,6 +116,7 @@ def paper_fig4_5(policies: Sequence[str] = ("linear", "tofa"),
     net = network_for(topo)
     engine = PlacementEngine()
     per_batch: dict[str, list[SimResult]] = {p: [] for p in policies}
+    place_time: dict[str, float] = {p: 0.0 for p in policies}
     for b in range(n_batches):
         # identical draw structure to batchsim.run_scenario: candidates
         # from the batch RNG, one attempt/placement RNG per (batch, policy)
@@ -129,6 +131,7 @@ def paper_fig4_5(policies: Sequence[str] = ("linear", "tofa"),
             plan = engine.place(
                 PlacementRequest(comm=wl.comm, topology=topo, p_f=known),
                 policy=pol, rng=rng)
+            place_time[pol] += plan.wall_time_s
             sch = Scheduler(topo, net=net, engine=engine)
             sim = ClusterSim(
                 sch,
@@ -144,6 +147,7 @@ def paper_fig4_5(policies: Sequence[str] = ("linear", "tofa"),
             "batch_completions": [r.makespan for r in rs],
             "aborted_attempts": int(sum(r.aborted_attempts for r in rs)),
             "n_events": int(sum(r.n_events for r in rs)),
+            "place_time_s": place_time[pol],
         }
     return {"name": "paper-fig4-5",
             "params": {"dims": getattr(topo, "dims", None),
