@@ -26,9 +26,9 @@ import time
 from repro.sim.scenarios import run_preset
 
 BENCH_PATH = pathlib.Path(__file__).parent / "BENCH_clustersim.json"
-GATED = ("saturated-queue", "correlated-failures")
+GATED = ("saturated-queue", "correlated-failures", "degraded-drain")
 PRESETS = ("paper-fig4-5", "saturated-queue", "mixed-stream", "fat-tree",
-           "correlated-failures", "drain-sweep")
+           "correlated-failures", "drain-sweep", "degraded-drain")
 
 
 def _flat_rows(name: str, out: dict) -> list[dict]:

@@ -19,6 +19,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 from repro.core.engine import PlacementEngine, PlacementRequest  # noqa: E402
 from repro.core.placement import Fabric, assign_devices  # noqa: E402
 from repro.core.profiler import comm_graph_from_hlo  # noqa: E402
+from repro.core.state import ClusterState, NodeHealth  # noqa: E402
 
 
 def main():
@@ -49,21 +50,25 @@ def main():
     print(f"total traffic: {comm.total_bytes()/1e6:.2f} MB/step\n")
 
     # physical fabric: a 4x4 ICI torus (16 chips) hosting the 8-shard job;
-    # chips 5 and 6 (inside the default linear window!) flagged unhealthy
+    # chips 5 and 6 (inside the default linear window!) degraded — the
+    # versioned ClusterState is the health input, and its epoch keys the
+    # engine caches, so re-running against the same snapshot stays warm
     fabric = Fabric(pod_dims=(4, 4), n_pods=1)
-    p_f = np.zeros(16)
-    p_f[[5, 6]] = 0.05
+    state = ClusterState.healthy(16).with_outage(
+        np.where(np.isin(np.arange(16), [5, 6]), 0.05, 0.0))
+    state = state.with_health([5, 6], NodeHealth.DEGRADED)
 
-    print("== placement policies (hop-bytes; chips 5,6 unhealthy) ==")
+    print("== placement policies (hop-bytes; chips 5,6 degraded) ==")
     engine = PlacementEngine()
-    req = PlacementRequest(comm=comm, topology=fabric, p_f=p_f)
+    req = PlacementRequest(comm=comm, topology=fabric, state=state)
     for pol, plan in engine.compare(req).items():
         print(f"  {pol:8s} hop_bytes={plan.hop_bytes/1e6:10.2f}MB "
               f"avg_dilation={plan.avg_dilation:.2f} "
               f"faulty_chips_used={plan.faulty_nodes_used} "
               f"({plan.wall_time_s*1e3:.0f}ms)")
 
-    a = assign_devices(comm, fabric, policy="tofa", p_f=p_f, engine=engine)
+    a = assign_devices(comm, fabric, policy="tofa", state=state,
+                       engine=engine)
     print(f"\nTOFA device permutation: {a.permutation.tolist()}")
     print(f"hop-bytes vs linear: {a.improvement:+.1%} "
           f"(faulty chips used: {a.plan.faulty_nodes_used})")

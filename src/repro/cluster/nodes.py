@@ -11,6 +11,7 @@ import enum
 
 import numpy as np
 
+from repro.core.state import NodeHealth
 from repro.core.topology import TorusTopology
 
 
@@ -18,6 +19,25 @@ class NodeState(enum.Enum):
     UP = "up"
     DOWN = "down"
     DRAINED = "drained"   # administratively removed (beyond paper: elastic)
+    DEGRADED = "degraded"  # allocatable but flaky: elevated outage estimate
+
+    @property
+    def health(self) -> NodeHealth:
+        """The :class:`~repro.core.state.NodeHealth` lifecycle code this
+        administrative state maps onto."""
+        return _HEALTH[self]
+
+    @property
+    def allocatable(self) -> bool:
+        return self in (NodeState.UP, NodeState.DEGRADED)
+
+
+_HEALTH = {
+    NodeState.UP: NodeHealth.UP,
+    NodeState.DEGRADED: NodeHealth.DEGRADED,
+    NodeState.DRAINED: NodeHealth.DRAINED,
+    NodeState.DOWN: NodeHealth.DOWN,
+}
 
 
 @dataclasses.dataclass
@@ -52,6 +72,18 @@ class NodeRegistry:
     def up_ids(self) -> np.ndarray:
         return np.array([n.node_id for n in self.nodes
                          if n.state == NodeState.UP])
+
+    def allocatable_ids(self) -> np.ndarray:
+        """Nodes placements may use: UP or DEGRADED, in id order."""
+        return np.array([n.node_id for n in self.nodes
+                         if n.state.allocatable], dtype=np.int64)
+
+    def health_codes(self) -> np.ndarray:
+        """(n,) int8 :class:`~repro.core.state.NodeHealth` codes — the
+        lifecycle vector a :class:`~repro.core.state.ClusterState`
+        snapshot is minted from."""
+        return np.array([int(n.state.health) for n in self.nodes],
+                        dtype=np.int8)
 
     def mark(self, ids, state: NodeState) -> None:
         for i in ids:

@@ -11,28 +11,41 @@ Composes the pieces the paper wires into Slurm as five plugins:
                            shared PlacementEngine overrides the default task
                            layout
 
-The scheduler owns one :class:`~repro.core.engine.PlacementEngine`, so hop
-and Eq. 1 weight matrices are derived once per (topology, health) state
-instead of once per submission.  Beyond the paper, it also supports
-*draining* (administratively removing nodes whose estimated outage crosses
-a threshold, with hysteresis so recovered nodes return to service) and
-*elastic re-placement*: when a running job's node goes down,
-``engine.replace`` moves only the displaced processes onto surviving
-healthy nodes and the job restarts (from the latest checkpoint if the
-checkpoint model is enabled in the simulator).
+The scheduler is the **owner of the cluster's health state**: it merges
+the registry's administrative lifecycle (UP / DEGRADED / DRAINED / DOWN)
+with the heartbeat monitor's outage estimates into one versioned
+:class:`~repro.core.state.ClusterState` snapshot
+(:meth:`Scheduler.cluster_state`).  A new epoch is minted **only when
+health actually changes** — lifecycle transitions or an estimate moving
+beyond ``p_f_atol`` (or flipping the ``p_f > 0`` pattern Eq. 1
+consults) — so estimator jitter between heartbeat rounds never produces
+a fresh engine cache key, and thousands of placements against a stable
+cluster stay warm.  Placement requests carry the snapshot plus a cheap
+*overlay* masking nodes allocated to running jobs.
+
+Beyond the paper, the scheduler also supports *degrading* (a flaky node
+whose estimate crosses ``degraded_threshold`` stays allocatable but is
+marked DEGRADED so Eq. 1 steers placements around it), *draining*
+(administratively removing nodes whose estimated outage crosses
+``drain_threshold``, with hysteresis so recovered nodes return to
+service) and *elastic re-placement*: when a running job's node goes
+down, ``engine.replace`` moves only the displaced processes onto
+surviving healthy nodes and the job restarts (from the latest checkpoint
+if the checkpoint model is enabled in the simulator).
 
 **Queueing.**  Nodes are allocated exclusively per running job (Slurm's
 default exclusive node allocation).  ``submit`` enqueues; the pending
-queue is drained FIFO against free UP capacity whenever capacity changes
-(submit / complete / recover / undrain).  With ``backfill=True``
-(default) a job behind a blocked queue head may start early when it fits
-in currently-free capacity.  This is *greedy* capacity backfill: the
-scheduler is clock-free, has no runtime estimates, and makes no
-reservations, so — unlike EASY backfill — a backfilled job *can* delay
-the blocked head (it holds nodes the head would have received at the
-next completion).  Use ``backfill=False`` for strict FIFO when
-head-of-line fairness matters more than utilisation.  The simulated-time
-event loop that drives this queue lives in :mod:`repro.sim.clustersim`.
+queue is drained FIFO against free allocatable capacity whenever
+capacity changes (submit / complete / recover / undrain).  With
+``backfill=True`` (default) a job behind a blocked queue head may start
+early when it fits in currently-free capacity.  This is *greedy*
+capacity backfill: the scheduler is clock-free, has no runtime
+estimates, and makes no reservations, so — unlike EASY backfill — a
+backfilled job *can* delay the blocked head (it holds nodes the head
+would have received at the next completion).  Use ``backfill=False`` for
+strict FIFO when head-of-line fairness matters more than utilisation.
+The simulated-time event loop that drives this queue lives in
+:mod:`repro.sim.clustersim`.
 """
 from __future__ import annotations
 
@@ -45,6 +58,7 @@ import numpy as np
 from repro.cluster.heartbeat import HeartbeatMonitor, MovingAverage
 from repro.cluster.nodes import NodeRegistry, NodeState
 from repro.core.engine import PlacementEngine, PlacementPlan, PlacementRequest
+from repro.core.state import ClusterState
 from repro.core.topology import TorusTopology
 from repro.sim.jobsim import successful_runtime
 from repro.sim.network import TorusNetwork
@@ -80,6 +94,8 @@ class Scheduler:
         estimator=None,
         drain_threshold: float = 0.5,
         undrain_threshold: float | None = None,
+        degraded_threshold: float | None = None,
+        p_f_atol: float = 0.25,
         seed: int = 0,
         engine: PlacementEngine | None = None,
         backfill: bool = True,
@@ -95,74 +111,129 @@ class Scheduler:
         self.undrain_threshold = (drain_threshold / 2.0
                                   if undrain_threshold is None
                                   else undrain_threshold)
+        # optional middle band: estimates in [degraded_threshold,
+        # drain_threshold) mark a node DEGRADED — still allocatable, but
+        # its elevated p_f makes Eq. 1 steer placements around it.
+        # None (default) disables the band: UP <-> DRAINED only.
+        self.degraded_threshold = degraded_threshold
+        # belief-staleness bound of the published ClusterState: estimate
+        # drift within +-p_f_atol (and an unchanged p_f > 0 pattern)
+        # re-uses the current epoch instead of minting a new one.  Every
+        # in-tree policy reads only the pattern, so sub-atol drift can
+        # never change a placement — it only would have cold-started the
+        # engine caches on every heartbeat round.
+        self.p_f_atol = p_f_atol
         self.backfill = backfill
         self.rng = np.random.default_rng(seed)
         self.engine = engine or PlacementEngine()
         self.records: dict[int, JobRecord] = {}
         self.queue: list[Job] = []              # pending jobs, FIFO order
         self.allocated: dict[int, np.ndarray] = {}   # job_id -> node ids
+        self._state = ClusterState.healthy(topo.n_nodes)
         # cumulative mapper wall-clock this scheduler has spent, across
         # queue drains and fault-driven re-placements (benchmarked per
         # scenario in benchmarks/clustersim.py)
         self.place_time_s: float = 0.0
 
     # -------------------------------------------------------------- health
+    def cluster_state(self) -> ClusterState:
+        """The current versioned health snapshot (FANS's world view).
+
+        Merges registry lifecycle codes with the heartbeat belief; a new
+        epoch is minted only when either actually changed (see
+        ``p_f_atol``), so callers can use ``state.key`` — and the engine
+        does — as a cache token that is stable across no-op heartbeat
+        rounds."""
+        codes = self.registry.health_codes()
+        p = self.monitor.outage_probabilities()
+        # a non-allocatable node's belief is pinned to 1.0 in every view
+        # placements consume, so its raw estimate drifting (a dead node's
+        # miss fraction climbing toward 1.0) must not mint epochs
+        p = np.where(codes <= np.int8(1), p, 1.0)   # 1 == DEGRADED
+        self._state = self._state.evolve(health=codes, p_f=p,
+                                         atol=self.p_f_atol)
+        return self._state
+
     def heartbeat_round(self, replies: np.ndarray,
                         latencies: np.ndarray | None = None,
                         dt: float = 1.0) -> list[JobRecord]:
-        """One heartbeat poll: update estimates, drain/undrain, and drain
-        the pending queue if capacity came back.  Returns newly started
-        records (draining never kills running jobs — Slurm semantics).
-        ``dt`` is the poll interval in simulated seconds, forwarded to
-        the monitor's clock (the event simulator passes its
+        """One heartbeat poll: update estimates, degrade/drain/undrain,
+        and drain the pending queue if capacity came back.  Returns newly
+        started records (draining never kills running jobs — Slurm
+        semantics).  ``dt`` is the poll interval in simulated seconds,
+        forwarded to the monitor's clock (the event simulator passes its
         ``heartbeat_interval``; the default 1.0 reads as one abstract
         round for direct callers)."""
         self.monitor.poll(replies, latencies, dt=dt)
         p = self.monitor.outage_probabilities()
+        deg = self.degraded_threshold
         freed = False
         for i in range(self.topo.n_nodes):
             state = self.registry[i].state
-            if state == NodeState.UP and p[i] >= self.drain_threshold:
+            if state.allocatable and p[i] >= self.drain_threshold:
                 self.registry.mark([i], NodeState.DRAINED)
             elif state == NodeState.DRAINED and p[i] < self.undrain_threshold:
-                self.registry.mark([i], NodeState.UP)
+                back = (NodeState.DEGRADED
+                        if deg is not None and p[i] >= deg else NodeState.UP)
+                self.registry.mark([i], back)
                 freed = True
+            elif deg is not None:
+                if state == NodeState.UP and p[i] >= deg:
+                    self.registry.mark([i], NodeState.DEGRADED)
+                elif state == NodeState.DEGRADED and p[i] < deg / 2.0:
+                    # same hysteresis shape as undrain: recover only once
+                    # the evidence has clearly faded
+                    self.registry.mark([i], NodeState.UP)
         return self.schedule_pending() if freed else []
 
     def estimated_outage(self) -> np.ndarray:
-        """p_f as FANS sees it: heartbeat estimate, drained nodes pinned.
-
-        Estimates are quantized (ceil to 1e-3, which preserves the
-        ``p_f > 0`` pattern Eq. 1 consults) so that estimator jitter
-        between heartbeat rounds does not produce a fresh health key —
-        and hence a fresh Eq. 1 weight-matrix derivation — in the
-        engine's (topology, health) caches on every placement."""
-        p = np.ceil(self.monitor.outage_probabilities() * 1000.0) / 1000.0
-        for n in self.registry.nodes:
-            if n.state != NodeState.UP:
-                p[n.node_id] = 1.0
-        return p
+        """p_f as FANS sees it: the current state's pinned outage vector —
+        heartbeat belief for allocatable nodes (DEGRADED keeps its
+        elevated estimate), DRAINED/DOWN pinned to certain outage."""
+        return self.cluster_state().outage_vector()
 
     # ----------------------------------------------------------- capacity
     def free_ids(self) -> np.ndarray:
-        """UP nodes not allocated to any running job, in id order."""
-        up = self.registry.up_ids()
+        """Allocatable (UP/DEGRADED) nodes not held by any running job,
+        in id order."""
+        ok = self.registry.allocatable_ids()
         if not self.allocated:
-            return up
+            return ok
         busy = np.concatenate(list(self.allocated.values()))
-        return up[~np.isin(up, busy)]
+        return ok[~np.isin(ok, busy)]
 
     # ---------------------------------------------------------- placement
     def placement_request(self, job: Job,
                           available: np.ndarray | None = None
                           ) -> PlacementRequest:
-        """FANS inputs: G from LoadMatrix, H from FATT, p_f from the
-        heartbeat history, availability from free UP capacity."""
+        """FANS inputs: G from LoadMatrix, H from FATT, and one versioned
+        ClusterState carrying p_f (heartbeat belief) and availability —
+        busy allocations enter as a cheap overlay on the snapshot, so the
+        epoch (and every engine cache keyed on it) survives until health
+        actually changes.
+
+        An explicit ``available`` that is an id-ordered subset of the
+        allocatable set (what :meth:`free_ids` produces) rides the
+        overlay; anything else — a custom order, or a what-if list
+        naming drained/down nodes — is passed verbatim through the
+        legacy request path so the caller's intent is honored exactly."""
+        state = self.cluster_state()
+        if available is None:
+            available = self.free_ids()
+        else:
+            available = np.asarray(available, dtype=np.int64)
+            alloc = state.available_ids()
+            ordered_subset = np.isin(available, alloc).all() and \
+                np.array_equal(available, alloc[np.isin(alloc, available)])
+            if not ordered_subset:
+                return PlacementRequest(
+                    comm=job.workload.comm, topology=self.topo,
+                    p_f=state.outage_vector(), available=available)
+        unavailable = np.setdiff1d(state.available_ids(), available)
         return PlacementRequest(
             comm=job.workload.comm,
             topology=self.topo,
-            p_f=self.estimated_outage(),
-            available=self.free_ids() if available is None else available,
+            state=state.overlay(unavailable=unavailable),
         )
 
     # ------------------------------------------------------------- running
@@ -199,9 +270,10 @@ class Scheduler:
         placement-independent), then every admitted job is placed with
         **one** :meth:`PlacementEngine.place_many` call in exclusive
         mode — the whole drain shares one backend scope, one set of
-        cached (topology, health) matrices, and the shrinking
-        availability mask is threaded through the batch exactly as the
-        old per-job loop did (bit-identical placements and RNG draws).
+        epoch-keyed (topology, state) matrices, and the shrinking
+        availability mask is threaded through the batch as state
+        overlays exactly as the old per-job loop did (bit-identical
+        placements and RNG draws).
         """
         remaining: list[Job] = []
         admitted: list[Job] = []
@@ -265,13 +337,15 @@ class Scheduler:
             # surviving nodes remain usable by the replacement
             del self.allocated[rec.job.job_id]
             try:
-                # pass the *current* registry/heartbeat view — the plan's
-                # request carries the submit-time snapshot, stale once other
-                # nodes failed or drained after submission
+                # pass the *current* snapshot (busy allocations overlaid)
+                # — the plan's request carries the submit-time state,
+                # stale once other nodes failed or drained after
+                # submission
+                state = self.cluster_state()
+                busy = np.setdiff1d(state.available_ids(), self.free_ids())
                 rec.placement = self.engine.replace(
                     rec.placement, node_ids, rng=self.rng,
-                    p_f=self.estimated_outage(),
-                    available=self.free_ids())
+                    state=state.overlay(unavailable=busy))
             except ValueError:
                 # survivors cannot hold the job: back to the queue head
                 rec.placement = None
@@ -296,11 +370,18 @@ class Scheduler:
         A repaired node whose heartbeat estimate still sits at or above
         ``drain_threshold`` comes back DRAINED, not UP — repair fixes the
         outage, not the flakiness evidence, so the undrain hysteresis in
-        :meth:`heartbeat_round` keeps gating its return to placements."""
+        :meth:`heartbeat_round` keeps gating its return to placements.
+        With the degraded band enabled, an estimate in [degraded, drain)
+        brings the node back DEGRADED."""
         p = self.monitor.outage_probabilities()
+        deg = self.degraded_threshold
         for i in (int(x) for x in np.atleast_1d(node_ids)):
-            state = (NodeState.DRAINED if p[i] >= self.drain_threshold
-                     else NodeState.UP)
+            if p[i] >= self.drain_threshold:
+                state = NodeState.DRAINED
+            elif deg is not None and p[i] >= deg:
+                state = NodeState.DEGRADED
+            else:
+                state = NodeState.UP
             self.registry.mark([i], state)
         return self.schedule_pending()
 

@@ -5,6 +5,7 @@ The placement stack is served by :class:`~repro.core.engine.PlacementEngine`
 ``place``/``tofa_place`` entry points remain as deprecation shims.
 """
 from repro.core.comm_graph import CommGraph
+from repro.core.state import ClusterState, NodeHealth, StateDiff
 from repro.core.topology import TorusTopology, find_consecutive_healthy
 from repro.core.fattree import FatTreeTopology
 from repro.core.mapping import hop_bytes, avg_dilation, map_graph

@@ -95,6 +95,12 @@ class JaxBackend:
         self._device: OrderedDict[int, tuple[np.ndarray, object]] = \
             OrderedDict()
         self._max_cached = max_cached_devices
+        # identity keying composes with the engine's epoch-keyed matrix
+        # cache: one (topology, state epoch) == one matrix object == one
+        # transfer.  The counters make that contract testable
+        # (tests/test_state.py asserts zero new transfers across a warm
+        # state-churn sequence).
+        self.stats = {"transfers": 0, "transfer_hits": 0}
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
         return f"<backend {self.name} dtype={self.dtype}>"
@@ -122,8 +128,10 @@ class JaxBackend:
         key = (id(arr), self.dtype)
         hit = self._device.get(key)
         if hit is not None:
+            self.stats["transfer_hits"] += 1
             self._device.move_to_end(key)
             return hit[1]
+        self.stats["transfers"] += 1
         with self.scope():
             dev = jax.device_put(np.asarray(arr, dtype=self.np_dtype))
         self._device[key] = (arr, dev)

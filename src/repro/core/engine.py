@@ -1,19 +1,30 @@
 """PlacementEngine — the unified placement service.
 
 One typed entry point replaces the old per-call-site wiring: a frozen
-:class:`PlacementRequest` (comm graph, topology, health snapshot ``p_f``,
-stragglers, availability mask, metric, seed) goes in and a
-:class:`PlacementPlan` (placement array, policy provenance, hop-bytes /
-dilation cost breakdown, faulty-node exposure, wall-time) comes out.
+:class:`PlacementRequest` (comm graph, topology, a versioned
+:class:`~repro.core.state.ClusterState` health snapshot, stragglers,
+metric, seed) goes in and a :class:`PlacementPlan` (placement array,
+policy provenance, hop-bytes / dilation cost breakdown, faulty-node
+exposure, wall-time) comes out.
 
 Policies are classes registered in :mod:`repro.core.policies`; hosts are
 anything satisfying the :class:`Topology` protocol (``TorusTopology``,
 ``Fabric``, ``FatTreeTopology``, ...).  The engine caches hop and Eq. 1
-weight matrices per (topology, health) key — the schedulers and batch
-simulators that place thousands of jobs against a slowly-changing health
-feed stop recomputing full topology state per job — and exposes
-:meth:`PlacementEngine.replace` for incremental re-placement when
-heartbeat-reported failures invalidate a running plan.
+weight matrices per ``(topology, state key)`` — the state key is the
+snapshot's monotonic *epoch* (plus an overlay digest for derived views),
+so schedulers and batch simulators that place thousands of jobs against
+a slowly-drifting health feed hit warm caches until health actually
+changes, with no byte-hashing or quantization of the raw vectors.  When
+a health change does arrive, topologies that implement
+``weight_matrix_update`` get a *row-wise delta refresh*: only the matrix
+entries whose routes touch a changed node are recomputed (bit-identical
+to a full derivation, differentially tested).
+
+:meth:`PlacementEngine.replace` performs incremental re-placement when a
+state diff (or an explicit failed set) invalidates a running plan, with
+a fast path that skips work entirely when the diff does not touch the
+incumbent placement.  The legacy ``(p_f, available)`` kwargs remain as a
+deprecation shim that interns an equivalent ``ClusterState`` internally.
 """
 from __future__ import annotations
 
@@ -30,6 +41,7 @@ from . import backend as _backend
 from .comm_graph import CommGraph
 from .mapping import avg_dilation, hop_bytes
 from .policies import PolicyContext, available_policies, get_policy
+from .state import ClusterState, StateDiff
 
 
 @runtime_checkable
@@ -40,6 +52,9 @@ class Topology(Protocol):
     (d-dim torus with dimension-ordered routing),
     :class:`~repro.core.placement.Fabric` (per-pod ICI torus + DCN hop
     layer), :class:`~repro.core.fattree.FatTreeTopology` (k-ary Clos).
+    Topologies may additionally implement
+    ``weight_matrix_update(W_prev, changed, p_f, straggler=...)`` to
+    refresh only the entries a small health delta invalidates.
     """
 
     @property
@@ -57,16 +72,26 @@ class Topology(Protocol):
 class PlacementRequest:
     """Everything a placement decision depends on, validated up front.
 
-    ``available`` restricts every policy to allocatable nodes (Slurm never
-    schedules onto DOWN/DRAINED nodes, independent of fault-awareness);
-    order is preserved — ``linear`` consumes it sequentially.
+    Health and availability travel as one versioned ``state``
+    (:class:`~repro.core.state.ClusterState`): allocatable nodes (UP or
+    DEGRADED, minus any overlay mask) restrict every policy — Slurm never
+    schedules onto DOWN/DRAINED nodes, independent of fault-awareness —
+    and the state's pinned outage vector feeds Eq. 1.
+
+    The pre-state ``(p_f, available)`` kwargs are kept one release as a
+    deprecation shim: passing them (without ``state``) interns an
+    equivalent ``ClusterState`` by content, so legacy callers that
+    re-submit identical health vectors keep the same epoch and hence
+    warm engine caches.  ``available`` order is preserved on the shim
+    path — ``linear`` consumes it sequentially.
     """
 
     comm: CommGraph
     topology: Topology
-    p_f: Optional[np.ndarray] = None          # per-node outage probability
+    state: Optional[ClusterState] = None      # versioned health snapshot
+    p_f: Optional[np.ndarray] = None          # deprecated: outage kwarg
     straggler: Optional[np.ndarray] = None    # per-node slowdown factor
-    available: Optional[np.ndarray] = None    # allocatable node ids
+    available: Optional[np.ndarray] = None    # deprecated: allocatable ids
     metric: str = "volume"                    # guest edge weight: volume|messages
     seed: int = 0                             # default RNG seed
 
@@ -74,23 +99,49 @@ class PlacementRequest:
         n, N = self.comm.n, self.topology.n_nodes
         if self.metric not in ("volume", "messages"):
             raise ValueError(f"unknown metric {self.metric!r}")
-        for field in ("p_f", "straggler"):
-            v = getattr(self, field)
-            if v is None:
-                continue
-            v = np.asarray(v, dtype=np.float64)
+        if self.straggler is not None:
+            v = np.asarray(self.straggler, dtype=np.float64)
             if v.shape != (N,):
                 raise ValueError(
-                    f"{field} has shape {v.shape}, topology has {N} nodes")
-            object.__setattr__(self, field, v)
-        if self.available is not None:
-            a = np.asarray(self.available, dtype=np.int64)
-            if a.ndim != 1:
-                raise ValueError("available must be a 1-d array of node ids")
-            if a.size and (a.min() < 0 or a.max() >= N):
+                    f"straggler has shape {v.shape}, topology has {N} nodes")
+            object.__setattr__(self, "straggler", v)
+        if self.state is not None:
+            if self.p_f is not None or self.available is not None:
                 raise ValueError(
-                    f"available ids out of range [0, {N}) for this topology")
-            object.__setattr__(self, "available", a)
+                    "pass either state= or the legacy (p_f, available) "
+                    "kwargs, not both")
+            if self.state.n_nodes != N:
+                raise ValueError(
+                    f"state has {self.state.n_nodes} nodes, topology {N}")
+            object.__setattr__(self, "_explicit_available", False)
+            # legacy-field views so policies and diagnostics keep working:
+            # p_f is the *pinned* outage vector (non-allocatable == 1.0)
+            object.__setattr__(self, "p_f", self.state.outage_vector())
+            object.__setattr__(self, "available",
+                               self.state.available_ids())
+        else:
+            if self.p_f is not None:
+                v = np.asarray(self.p_f, dtype=np.float64)
+                if v.shape != (N,):
+                    raise ValueError(
+                        f"p_f has shape {v.shape}, topology has {N} nodes")
+                object.__setattr__(self, "p_f", v)
+            if self.available is not None:
+                a = np.asarray(self.available, dtype=np.int64)
+                if a.ndim != 1:
+                    raise ValueError(
+                        "available must be a 1-d array of node ids")
+                if a.size and (a.min() < 0 or a.max() >= N):
+                    raise ValueError(
+                        f"available ids out of range [0, {N}) for this "
+                        f"topology")
+                object.__setattr__(self, "available", a)
+            object.__setattr__(self, "_explicit_available",
+                               self.available is not None)
+            # deprecation shim: intern an equivalent state by content so
+            # identical legacy kwargs share one epoch (and warm caches)
+            object.__setattr__(self, "state", ClusterState.from_arrays(
+                N, p_f=self.p_f, available=self.available))
         if n > N:
             raise ValueError(f"{n} processes > {N} nodes")
         if len(self.available_ids) < n:
@@ -112,6 +163,13 @@ class PlacementRequest:
             return np.arange(self.n_nodes)
         return self.available
 
+    @property
+    def health_key(self) -> tuple:
+        """Cache token for everything derived from this request's health:
+        the state key (epoch + overlay digest) plus the straggler bytes."""
+        s = None if self.straggler is None else self.straggler.tobytes()
+        return (self.state.key, s)
+
     def effective_p_f(self) -> np.ndarray:
         """Outage vector as the mapper sees it: unavailable nodes are
         certain outages (pinned to 1.0) regardless of the heartbeat view."""
@@ -122,6 +180,26 @@ class PlacementRequest:
             mask[self.available] = False
             p[mask] = 1.0
         return p
+
+    def restrict(self, busy) -> "PlacementRequest":
+        """This request minus ``busy`` nodes (exclusive-allocation
+        threading).  State-built requests get a cheap overlay; shim
+        requests keep their verbatim availability order."""
+        busy = np.atleast_1d(np.asarray(busy, dtype=np.int64))
+        if not busy.size:
+            return self
+        if getattr(self, "_explicit_available", False):
+            avail = self.available
+            return PlacementRequest(
+                comm=self.comm, topology=self.topology,
+                p_f=None if self.p_f is None else self.p_f,
+                straggler=self.straggler,
+                available=avail[~np.isin(avail, busy)],
+                metric=self.metric, seed=self.seed)
+        return PlacementRequest(
+            comm=self.comm, topology=self.topology,
+            state=self.state.overlay(unavailable=busy),
+            straggler=self.straggler, metric=self.metric, seed=self.seed)
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -171,10 +249,14 @@ class PlacementPlan:
 class PlacementEngine:
     """Policy-pluggable, cache-backed placement service.
 
-    Hop matrices are cached per topology; Eq. 1 weight matrices per
-    (topology, p_f, straggler) with LRU eviction — weight matrices are the
-    expensive derivation (route enumeration per node pair), and health
-    snapshots repeat across jobs between heartbeat updates.
+    Hop matrices are cached per topology; Eq. 1 weight matrices and
+    policy memo dicts per ``(topology, health key)`` with LRU eviction.
+    The health key is the request state's epoch (plus overlay digest), so
+    cache lifetime tracks *actual* health changes: a thousand placements
+    against one epoch derive the weight matrix once, and on the jax
+    backend the same matrix object stays device-resident across all of
+    them (the backend's identity-keyed transfer cache composes with the
+    epoch keying — one epoch, one host->device transfer).
     """
 
     def __init__(self, default_policy: str = "tofa",
@@ -191,11 +273,16 @@ class PlacementEngine:
         self._coords: dict[Any, np.ndarray] = {}
         self._weights: OrderedDict[Any, np.ndarray] = OrderedDict()
         self._shared: OrderedDict[Any, dict] = OrderedDict()
+        # per-topology record of the last derived weight matrix and the
+        # health it answers — the base for row-wise delta refreshes
+        self._weights_last: dict[Any, tuple] = {}
         self._pinned: dict[int, Topology] = {}
         self._max_weights = max_cached_weights
         self.stats = {"hop_hits": 0, "hop_misses": 0,
                       "weight_hits": 0, "weight_misses": 0,
-                      "shared_hits": 0, "shared_misses": 0}
+                      "shared_hits": 0, "shared_misses": 0,
+                      "weight_delta_updates": 0,
+                      "replace_skips": 0}
 
     # ------------------------------------------------------------ caching
     def _topo_key(self, topo: Topology):
@@ -223,30 +310,84 @@ class PlacementEngine:
 
     def weights(self, topo: Topology, p_f: Optional[np.ndarray] = None,
                 straggler: Optional[np.ndarray] = None) -> np.ndarray:
-        """Eq. 1 route-weight matrix for one (topology, health) state."""
+        """Eq. 1 route-weight matrix for one (topology, health) state.
+
+        Direct-array entry point (legacy: keys on the raw bytes).
+        Engine-internal placements go through :meth:`_weights_for`, which
+        keys on the request state's epoch instead."""
+        key = (self._topo_key(topo),
+               None if p_f is None else np.asarray(p_f).tobytes(),
+               None if straggler is None else np.asarray(straggler).tobytes())
+        return self._weights_cached(topo, key, p_f, straggler)
+
+    def _weights_for(self, topo: Topology,
+                     request: PlacementRequest,
+                     p_f_eff: np.ndarray) -> np.ndarray:
+        """Weight matrix for a request, epoch-keyed on its health state."""
+        key = (self._topo_key(topo),) + request.health_key
+        return self._weights_cached(topo, key, p_f_eff, request.straggler)
+
+    def _weights_cached(self, topo: Topology, key,
+                        p_f: Optional[np.ndarray],
+                        straggler: Optional[np.ndarray]) -> np.ndarray:
         no_fault = p_f is None or not (np.asarray(p_f) > 0).any()
         no_slow = straggler is None or not (np.asarray(straggler) > 0).any()
         if no_fault and no_slow:
             # Eq. 1 with all-healthy nodes degenerates to the hop metric
             return self.hops(topo)
-        key = (self._topo_key(topo),
-               None if p_f is None else np.asarray(p_f).tobytes(),
-               None if straggler is None else np.asarray(straggler).tobytes())
         if key in self._weights:
             self.stats["weight_hits"] += 1
             self._weights.move_to_end(key)
             return self._weights[key]
         self.stats["weight_misses"] += 1
-        w = topo.weight_matrix(p_f, straggler=straggler)
+        w = self._derive_weights(topo, p_f, straggler)
         self._weights[key] = w
         while len(self._weights) > self._max_weights:
             self._weights.popitem(last=False)
         return w
 
+    def _derive_weights(self, topo: Topology,
+                        p_f: Optional[np.ndarray],
+                        straggler: Optional[np.ndarray]) -> np.ndarray:
+        """Full derivation, or a row-wise delta refresh from the last
+        derived matrix when the topology supports it and the health delta
+        is small.  Delta results are bit-identical to full derivation
+        (only entries whose routes touch a changed node can differ, and
+        exactly those are recomputed with the same formula)."""
+        n = topo.n_nodes
+        flags = (np.zeros(n, dtype=bool) if p_f is None
+                 else np.asarray(p_f) > 0)
+        slow = None
+        if straggler is not None and (np.asarray(straggler) > 0).any():
+            slow = np.asarray(straggler, dtype=np.float64)
+        topo_key = self._topo_key(topo)
+        last = self._weights_last.get(topo_key)
+        W = None
+        if last is not None and hasattr(topo, "weight_matrix_update"):
+            prev_flags, prev_slow, W_prev = last
+            changed = flags != prev_flags
+            if slow is not None or prev_slow is not None:
+                sl = slow if slow is not None else np.zeros(n)
+                psl = prev_slow if prev_slow is not None else np.zeros(n)
+                changed = changed | (sl != psl)
+            n_changed = int(changed.sum())
+            if n_changed == 0:
+                W = W_prev
+            elif n_changed <= max(1, n // 4):
+                W = topo.weight_matrix_update(
+                    W_prev, np.flatnonzero(changed), p_f,
+                    straggler=straggler)
+                self.stats["weight_delta_updates"] += 1
+        if W is None:
+            W = topo.weight_matrix(p_f, straggler=straggler)
+        self._weights_last[topo_key] = (flags, slow, W)
+        return W
+
     def shared_cache(self, topo: Topology,
                      p_f: Optional[np.ndarray] = None,
                      straggler: Optional[np.ndarray] = None) -> dict:
-        """Policy memo dict for one (topology, health) state.
+        """Policy memo dict for one (topology, health) state (raw-array
+        entry point; engine-internal placements key on the state epoch).
 
         Policies use it (via :meth:`PolicyContext.memo`) for
         guest-independent intermediates — e.g. TOFA's consecutive-window
@@ -257,6 +398,13 @@ class PlacementEngine:
         key = (self._topo_key(topo),
                None if p_f is None else np.asarray(p_f).tobytes(),
                None if straggler is None else np.asarray(straggler).tobytes())
+        return self._shared_cached(key)
+
+    def _shared_for(self, topo: Topology, request: PlacementRequest) -> dict:
+        return self._shared_cached(
+            (self._topo_key(topo),) + request.health_key)
+
+    def _shared_cached(self, key) -> dict:
         if key in self._shared:
             self.stats["shared_hits"] += 1
             self._shared.move_to_end(key)
@@ -273,6 +421,15 @@ class PlacementEngine:
                     cached_topologies=len(self._hops),
                     cached_weight_matrices=len(self._weights),
                     cached_shared_dicts=len(self._shared))
+
+    def cache_hit_rate(self) -> float:
+        """Fraction of weight + shared lookups served warm (1.0 when no
+        lookups happened yet) — the number the epoch-keyed state model
+        keeps high under heartbeat jitter (see benchmarks/state_churn.py)."""
+        hits = self.stats["weight_hits"] + self.stats["shared_hits"]
+        misses = self.stats["weight_misses"] + self.stats["shared_misses"]
+        total = hits + misses
+        return 1.0 if total == 0 else hits / total
 
     def _backend_ctx(self):
         return (_backend.use(self.backend) if self.backend is not None
@@ -293,7 +450,6 @@ class PlacementEngine:
         t0 = time.perf_counter()
         topo = request.topology
         p_f = request.effective_p_f()
-        straggler = request.straggler
         ctx = PolicyContext(
             request=request,
             G_w=request.comm.weights(request.metric),
@@ -302,8 +458,8 @@ class PlacementEngine:
             p_f=p_f,
             available=request.available_ids,
             rng=rng,
-            _weights_fn=lambda: self.weights(topo, p_f, straggler),
-            shared=self.shared_cache(topo, p_f, straggler),
+            _weights_fn=lambda: self._weights_for(topo, request, p_f),
+            shared=self._shared_for(topo, request),
         )
         out = pol.place(ctx)
         wall = time.perf_counter() - t0
@@ -343,11 +499,12 @@ class PlacementEngine:
         ``default_rng(request.seed)``, matching ``place``.
 
         ``exclusive=True`` applies scheduler queue-drain semantics:
-        requests are placed in order and each is restricted to nodes no
-        earlier plan in the batch occupies (Slurm's exclusive node
-        allocation).  Raises ``ValueError`` — like the equivalent
-        sequential validation would — if a request no longer fits in
-        what remains.
+        requests are placed in order and each is restricted — via a
+        cheap :meth:`ClusterState.overlay` when the request carries a
+        state — to nodes no earlier plan in the batch occupies (Slurm's
+        exclusive node allocation).  Raises ``ValueError`` — like the
+        equivalent sequential validation would — if a request no longer
+        fits in what remains.
         """
         requests = list(requests)
         if policy is None or isinstance(policy, str):
@@ -365,9 +522,7 @@ class PlacementEngine:
                 if exclusive:
                     busy = taken.get(key)
                     if busy is not None and busy.size:
-                        avail = req.available_ids
-                        req = dataclasses.replace(
-                            req, available=avail[~np.isin(avail, busy)])
+                        req = req.restrict(busy)
                 plan = self._place(req, policy=pol, rng=rng)
                 plans.append(plan)
                 if exclusive:
@@ -379,92 +534,146 @@ class PlacementEngine:
 
     # -------------------------------------------------------- re-placement
     def replace(self, plan: PlacementPlan,
-                failed_nodes: Sequence[int] | np.ndarray,
-                *, rng: Optional[np.random.Generator] = None,
+                failed_nodes: Union[Sequence[int], np.ndarray, None] = None,
+                *, state: Optional[ClusterState] = None,
+                rng: Optional[np.random.Generator] = None,
                 full: bool = False,
                 p_f: Optional[np.ndarray] = None,
                 available: Optional[np.ndarray] = None) -> PlacementPlan:
-        """Incremental fault-driven re-placement.
+        """Incremental fault-driven (or diff-driven) re-placement.
 
-        Marks ``failed_nodes`` as certain outages, removes them from the
-        availability mask, and moves only the displaced processes — each to
-        the free surviving node minimising its traffic-weighted Eq. 1 cost
-        against the processes that stay put.  Falls back to a full re-map
-        (``provenance="replace-full"``) when ``full=True`` or more than half
-        the job is displaced.  Raises ``ValueError`` when the survivors
-        cannot hold the job.
+        Marks ``failed_nodes`` as certain outages (an overlay on the
+        health state), and moves only the displaced processes — each to
+        the free surviving node minimising its traffic-weighted Eq. 1
+        cost against the processes that stay put.  Falls back to a full
+        re-map (``provenance="replace-full"``) when ``full=True`` or more
+        than half the job is displaced.  Raises ``ValueError`` when the
+        survivors cannot hold the job.
 
-        ``p_f`` / ``available`` refresh the health and availability view:
-        the plan's request carries the *submit-time* snapshot, which goes
-        stale once other nodes fail or drain after submission — a live
-        scheduler passes its current estimates here.
+        ``state`` refreshes the health view to the caller's *current*
+        snapshot — the plan's request carries the submit-time snapshot,
+        stale once other nodes fail or drain after submission.  With
+        ``state`` given and ``failed_nodes`` omitted, the failed set is
+        computed from the **state diff**: the nodes that were allocatable
+        at submit time but are not any more.  **Fast path:** when the
+        diff (or the explicit failed set) does not touch any node the
+        incumbent placement uses, the plan is returned unchanged — no
+        matrices, no context, no new request.
+
+        The legacy ``p_f=`` / ``available=`` kwargs remain as a
+        deprecation shim equivalent to passing the interned state they
+        describe.
         """
         with self._backend_ctx():
-            return self._replace(plan, failed_nodes, rng=rng, full=full,
-                                 p_f=p_f, available=available)
+            return self._replace(plan, failed_nodes, state=state, rng=rng,
+                                 full=full, p_f=p_f, available=available)
 
     def _replace(self, plan: PlacementPlan,
-                 failed_nodes: Sequence[int] | np.ndarray,
-                 *, rng: Optional[np.random.Generator] = None,
+                 failed_nodes: Union[Sequence[int], np.ndarray, None] = None,
+                 *, state: Optional[ClusterState] = None,
+                 rng: Optional[np.random.Generator] = None,
                  full: bool = False,
                  p_f: Optional[np.ndarray] = None,
                  available: Optional[np.ndarray] = None) -> PlacementPlan:
-        failed = np.unique(np.atleast_1d(np.asarray(failed_nodes,
-                                                    dtype=np.int64)))
         req = plan.request
-        if failed.size and (failed.min() < 0 or failed.max() >= req.n_nodes):
-            raise ValueError(
-                f"failed node ids out of range [0, {req.n_nodes})")
-        base_p_f = req.p_f if p_f is None else np.asarray(p_f, np.float64)
-        new_p_f = (np.zeros(req.n_nodes) if base_p_f is None
-                   else base_p_f.copy())
-        new_p_f[failed] = 1.0
-        avail = (req.available_ids if available is None
-                 else np.asarray(available, dtype=np.int64))
-        new_avail = avail[~np.isin(avail, failed)]
-        if len(new_avail) < req.n_procs:
-            raise ValueError(
-                f"cannot re-place: {req.n_procs} processes > "
-                f"{len(new_avail)} surviving nodes")
-        new_req = dataclasses.replace(req, p_f=new_p_f, available=new_avail)
+        if state is not None and (p_f is not None or available is not None):
+            raise ValueError("pass either state= or the legacy "
+                             "(p_f, available) kwargs, not both")
+        if state is not None:
+            base = state
+        elif p_f is not None or available is not None:
+            base = ClusterState.from_arrays(
+                req.n_nodes,
+                p_f=req.p_f if p_f is None else np.asarray(p_f, np.float64),
+                available=(req.available_ids if available is None
+                           else np.asarray(available, dtype=np.int64)))
+        else:
+            base = req.state
+        if failed_nodes is None:
+            diff = req.state.diff(base)
+            failed = diff.lost()
+        else:
+            failed = np.unique(np.atleast_1d(
+                np.asarray(failed_nodes, dtype=np.int64)))
+            if failed.size and (failed.min() < 0
+                                or failed.max() >= req.n_nodes):
+                raise ValueError(
+                    f"failed node ids out of range [0, {req.n_nodes})")
 
         placement = plan.placement.copy()
         displaced = np.flatnonzero(np.isin(placement, failed))
+        if not full and len(displaced) == 0:
+            # the change does not touch this job: keep the plan as-is
+            self.stats["replace_skips"] += 1
+            return plan
+
+        if state is None and (available is not None
+                              or getattr(req, "_explicit_available", False)):
+            # legacy shim with an explicitly-*ordered* availability array:
+            # preserve the caller's order verbatim (``linear`` consumes it
+            # sequentially), exactly as the pre-state API did
+            base_p_f = (req.p_f if p_f is None
+                        else np.asarray(p_f, np.float64))
+            new_p_f = (np.zeros(req.n_nodes) if base_p_f is None
+                       else base_p_f.copy())
+            new_p_f[failed] = 1.0
+            avail = (req.available_ids if available is None
+                     else np.asarray(available, dtype=np.int64))
+            new_avail = avail[~np.isin(avail, failed)]
+            if len(new_avail) < req.n_procs:
+                raise ValueError(
+                    f"cannot re-place: {req.n_procs} processes > "
+                    f"{len(new_avail)} surviving nodes")
+            new_req = PlacementRequest(
+                comm=req.comm, topology=req.topology, p_f=new_p_f,
+                available=new_avail, straggler=req.straggler,
+                metric=req.metric, seed=req.seed)
+        else:
+            new_state = base.overlay(unavailable=failed)
+            new_avail = new_state.available_ids()
+            if len(new_avail) < req.n_procs:
+                raise ValueError(
+                    f"cannot re-place: {req.n_procs} processes > "
+                    f"{len(new_avail)} surviving nodes")
+            new_req = PlacementRequest(
+                comm=req.comm, topology=req.topology, state=new_state,
+                straggler=req.straggler, metric=req.metric, seed=req.seed)
+
         if full or len(displaced) > max(1, len(placement) // 2):
-            fresh = self.place(new_req, policy=plan.policy, rng=rng)
+            fresh = self._place(new_req, policy=plan.policy, rng=rng)
             return dataclasses.replace(fresh, provenance="replace-full")
 
         t0 = time.perf_counter()
+        p_eff = new_req.effective_p_f()
         ctx = PolicyContext(
             request=new_req,
             G_w=req.comm.weights(req.metric),
             coords=self.coords(req.topology),
             hops=self.hops(req.topology),
-            p_f=new_req.effective_p_f(),
+            p_f=p_eff,
             available=new_avail,
             rng=rng if rng is not None else np.random.default_rng(req.seed),
         )
-        if len(displaced):
-            W = self.weights(req.topology, ctx.p_f, req.straggler)
-            ctx._weights = W
-            used = np.zeros(req.n_nodes, dtype=bool)
-            kept = np.ones(len(placement), dtype=bool)
-            kept[displaced] = False
-            used[placement[kept]] = True
-            free = new_avail[~used[new_avail]]
-            # heaviest talkers first: they constrain the remaining choices most
-            order = displaced[np.argsort(ctx.G_w[displaced].sum(axis=1))[::-1]]
-            settled = kept.copy()
-            for i in order:
-                peers = np.flatnonzero(settled)
-                if peers.size:
-                    cost = W[np.ix_(free, placement[peers])] @ ctx.G_w[i, peers]
-                else:
-                    cost = W[free].sum(axis=1)  # isolated: most central node
-                best = free[int(np.argmin(cost))]
-                placement[i] = best
-                settled[i] = True
-                free = free[free != best]
+        W = self._weights_for(req.topology, new_req, p_eff)
+        ctx._weights = W
+        used = np.zeros(req.n_nodes, dtype=bool)
+        kept = np.ones(len(placement), dtype=bool)
+        kept[displaced] = False
+        used[placement[kept]] = True
+        free = new_avail[~used[new_avail]]
+        # heaviest talkers first: they constrain the remaining choices most
+        order = displaced[np.argsort(ctx.G_w[displaced].sum(axis=1))[::-1]]
+        settled = kept.copy()
+        for i in order:
+            peers = np.flatnonzero(settled)
+            if peers.size:
+                cost = W[np.ix_(free, placement[peers])] @ ctx.G_w[i, peers]
+            else:
+                cost = W[free].sum(axis=1)  # isolated: most central node
+            best = free[int(np.argmin(cost))]
+            placement[i] = best
+            settled[i] = True
+            free = free[free != best]
         wall = time.perf_counter() - t0
         return self._plan(new_req, plan.policy, placement,
                           plan.used_consecutive_window, ctx, wall,

@@ -102,3 +102,36 @@ class FatTreeTopology:
             np.fill_diagonal(extra, 0.0)
             w = w + extra
         return w
+
+    def weight_matrix_update(
+        self,
+        W_prev: np.ndarray,
+        changed,
+        p_f: np.ndarray | None = None,
+        c: float = 1.0,
+        straggler: np.ndarray | None = None,
+    ) -> np.ndarray:
+        """Row-wise delta refresh of :meth:`weight_matrix`.
+
+        In endpoint form a node's health only enters through its own
+        penalty term, so a change at node x invalidates exactly row x and
+        column x.  Recomputed entries use the same expression as the full
+        derivation (bit-identical; see ``tests/test_state.py``).
+        """
+        changed = np.atleast_1d(np.asarray(changed, dtype=np.int64))
+        if changed.size == 0:
+            return W_prev
+        n = self.n_nodes
+        penalty = np.zeros(n)
+        if p_f is not None:
+            penalty += c * FAULT_PENALTY * (np.asarray(p_f, np.float64) > 0)
+        if straggler is not None:
+            penalty += c * np.asarray(straggler, dtype=np.float64)
+        extra = penalty[:, None] + penalty[None, :]
+        np.fill_diagonal(extra, 0.0)
+        base = c * self.hop_matrix()
+        ref = base + extra
+        W = W_prev.copy()
+        W[changed, :] = ref[changed, :]
+        W[:, changed] = ref[:, changed]
+        return W

@@ -146,6 +146,7 @@ def assign_devices(
     p_f: np.ndarray | None = None,
     rng: np.random.Generator | None = None,
     engine: Optional[PlacementEngine] = None,
+    state=None,
 ) -> DeviceAssignment:
     """Compute a device permutation for ``Mesh`` construction.
 
@@ -165,7 +166,11 @@ def assign_devices(
     # comm.n < n_chips is fine: the job occupies a subset of the fabric
     # (placement[k] is then a chip id, not a permutation of 0..n-1)
     engine = engine if engine is not None else default_engine()
-    req = PlacementRequest(comm=comm, topology=fabric, p_f=p_f)
+    # ``state`` (a ClusterState over chips) is the first-class health
+    # input; the ``p_f`` kwarg remains as the engine-level shim does
+    req = (PlacementRequest(comm=comm, topology=fabric, state=state)
+           if state is not None
+           else PlacementRequest(comm=comm, topology=fabric, p_f=p_f))
     plan = engine.place(req, policy=policy, rng=rng)
     hops = engine.hops(fabric)
     identity = np.arange(comm.n)
@@ -184,6 +189,7 @@ def compare_policies(
     p_f: np.ndarray | None = None,
     seed: int = 0,
     engine: Optional[PlacementEngine] = None,
+    state=None,
 ) -> dict:
     """Hop-bytes and dilation per policy — the placement-quality report.
 
@@ -191,7 +197,11 @@ def compare_policies(
     one engine, so the fabric's hop/weight matrices are derived once.
     """
     engine = engine if engine is not None else default_engine()
-    req = PlacementRequest(comm=comm, topology=fabric, p_f=p_f, seed=seed)
+    req = (PlacementRequest(comm=comm, topology=fabric, state=state,
+                            seed=seed)
+           if state is not None
+           else PlacementRequest(comm=comm, topology=fabric, p_f=p_f,
+                                 seed=seed))
     plans = engine.compare(req, policies=policies)
     return {pol: {
         "hop_bytes": plan.hop_bytes,

@@ -174,6 +174,90 @@ class TorusTopology:
                 w[u, v] += extra
         return w
 
+    def pairs_through(self, nodes) -> np.ndarray:
+        """(n, n) bool: pairs whose dimension-ordered route touches any of
+        ``nodes`` (endpoints included).
+
+        While the route corrects dimension ``k``, the visited nodes have
+        coordinates ``(v[<k], path(u[k] -> v[k]), u[>k])`` — so node x is
+        on route(u, v) iff for some k the prefix of x matches v, the
+        suffix matches u, and ``x[k]`` lies on the shortest wrap path in
+        dimension k.  Vectorized over all pairs per probed node; used by
+        :meth:`weight_matrix_update` to bound delta refreshes to exactly
+        the entries a health change can invalidate.
+        """
+        c = self.coords_array()
+        n = self.n_nodes
+        aff = np.zeros((n, n), dtype=bool)
+        for x in np.atleast_1d(np.asarray(nodes, dtype=np.int64)):
+            xc = c[int(x)]
+            # post[k]: u-side suffix match (u[j] == x[j] for all j > k-1);
+            # post[k+1] is the constraint for dims strictly after k
+            post = np.ones((self.ndim + 1, n), dtype=bool)
+            for j in range(self.ndim - 1, -1, -1):
+                post[j] = post[j + 1] & (c[:, j] == xc[j])
+            pre = np.ones(n, dtype=bool)      # v-side prefix match (j < k)
+            for k in range(self.ndim):
+                d = self.dims[k]
+                a = c[:, k]                   # u-side coordinate, dim k
+                b = c[:, k]                   # v-side coordinate, dim k
+                fwd = (b[None, :] - a[:, None]) % d
+                bwd = (a[:, None] - b[None, :]) % d
+                on_f = ((xc[k] - a[:, None]) % d) <= fwd
+                on_b = ((a[:, None] - xc[k]) % d) <= bwd
+                on = np.where(fwd <= bwd, on_f, on_b)
+                aff |= post[k + 1][:, None] & pre[None, :] & on
+                pre = pre & (c[:, k] == xc[k])
+        np.fill_diagonal(aff, False)          # empty routes: nothing to touch
+        return aff
+
+    def weight_matrix_update(
+        self,
+        W_prev: np.ndarray,
+        changed,
+        p_f: np.ndarray | None = None,
+        c: float = 1.0,
+        straggler: np.ndarray | None = None,
+    ) -> np.ndarray:
+        """Row-wise delta refresh of :meth:`weight_matrix`.
+
+        ``W_prev`` must be the weight matrix of a health state that
+        differs from ``(p_f, straggler)`` exactly at the ``changed``
+        node ids (penalty flag or slowdown value).  Only the entries
+        whose routes touch a changed node are recomputed — with the same
+        formula as the full derivation, so the result is bit-identical
+        to ``weight_matrix(p_f, c, straggler)`` (asserted in
+        ``tests/test_state.py``).
+        """
+        changed = np.atleast_1d(np.asarray(changed, dtype=np.int64))
+        if changed.size == 0:
+            return W_prev
+        n = self.n_nodes
+        p_f = np.zeros(n) if p_f is None else np.asarray(p_f, np.float64)
+        base = c * self.hop_matrix()
+        penal_set = set(np.flatnonzero(p_f > 0).tolist())
+        slow = None
+        if straggler is not None:
+            slow = np.asarray(straggler, dtype=np.float64)
+            if not np.any(slow > 0):
+                slow = None
+        slow_idx = (set(np.flatnonzero(slow > 0).tolist())
+                    if slow is not None else set())
+        aff = self.pairs_through(changed)
+        W = W_prev.copy()
+        for u, v in zip(*np.nonzero(aff)):
+            nodes = self.route_nodes(int(u), int(v))
+            extra = 0.0
+            for a, b in zip(nodes[:-1], nodes[1:]):
+                if a in penal_set or b in penal_set:
+                    extra += c * FAULT_PENALTY
+                elif a in slow_idx or b in slow_idx:
+                    sa = slow[a] if a in slow_idx else 0.0
+                    sb = slow[b] if b in slow_idx else 0.0
+                    extra += c * max(sa, sb)
+            W[u, v] = base[u, v] + extra
+        return W
+
     # ------------------------------------------------------------- sub-extract
     def submatrix(self, weights: np.ndarray, nodes: Sequence[int]) -> np.ndarray:
         """ScotchExtract analogue: restrict a weight matrix to ``nodes``."""

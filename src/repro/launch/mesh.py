@@ -37,6 +37,7 @@ def make_tofa_mesh(
     *,
     multi_pod: bool = False,
     p_f: Optional[np.ndarray] = None,
+    state=None,
     policy: str = "tofa",
     engine=None,
 ):
@@ -46,8 +47,10 @@ def make_tofa_mesh(
        compiled HLO (the paper's LoadMatrix input);
     2. the requested registry policy runs through the
        :class:`~repro.core.engine.PlacementEngine` against the v5e fabric
-       model (FATT input) and heartbeat health (p_f) — pass a shared
-       ``engine`` so repeated mesh builds reuse cached fabric matrices;
+       model (FATT input) and chip health — pass ``state`` (a versioned
+       :class:`~repro.core.state.ClusterState` over chips) so repeated
+       mesh builds against one health epoch reuse the engine's cached
+       fabric matrices; the raw ``p_f`` kwarg remains as a shim;
     3. the permutation is applied to ``jax.devices()``.
 
     Returns (mesh, DeviceAssignment) — the assignment carries hop-bytes
@@ -65,6 +68,7 @@ def make_tofa_mesh(
     fabric = Fabric(pod_dims=(16, 16), n_pods=2 if multi_pod else 1)
     comm = comm_graph_from_hlo(hlo_text, n_devices=n)
     assignment = assign_devices(comm, fabric, policy=policy, p_f=p_f,
+                                state=state,
                                 engine=engine or default_engine())
     devs = np.asarray(jax.devices()[:n])
     # logical shard k runs on physical chip assignment.permutation[k]; on

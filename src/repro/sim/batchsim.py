@@ -23,6 +23,7 @@ import numpy as np
 
 from repro.cluster.failures import FailureModel
 from repro.core.engine import PlacementEngine, PlacementRequest
+from repro.core.state import ClusterState
 from repro.core.topology import TorusTopology
 from repro.sim.jobsim import simulate_instance, successful_runtime
 from repro.sim.network import TorusNetwork
@@ -80,7 +81,11 @@ def run_batch(
     rng = rng or np.random.default_rng(0)
     topo = net.topo
     engine = engine or PlacementEngine()
-    req = PlacementRequest(comm=wl.comm, topology=topo, p_f=known_p_f)
+    # the belief travels as a versioned ClusterState; from_arrays interns
+    # by content, so every batch sharing one N_f shares one epoch (and
+    # the engine's epoch-keyed weight matrices)
+    state = ClusterState.from_arrays(topo.n_nodes, p_f=known_p_f)
+    req = PlacementRequest(comm=wl.comm, topology=topo, state=state)
     res = engine.place(req, policy=policy, rng=rng)
     placement = res.placement
     t_ok = successful_runtime(wl, placement, net)

@@ -47,6 +47,19 @@ COMPLETE    an attempt finishes; capacity frees; chained jobs submit
   per-attempt model); the scheduler re-places the survivors or requeues
   jobs the surviving capacity cannot hold.
 
+**State ownership.**  Who knows what about node health is deliberately
+split (see ``docs/ARCHITECTURE.md``): the *simulator* owns ground truth
+(``_down_count`` — how many overlapping outages hold each node down —
+plus ``registry.true_outage_p`` flakiness), the *failure layers* own the
+injection processes, and the *scheduler* owns the single **belief**
+artifact every placement consumes — a versioned
+:class:`~repro.core.state.ClusterState` snapshot merged from registry
+lifecycle and heartbeat estimates (``Scheduler.cluster_state()``).  The
+simulator never hands truth to the mapper; it only shapes the heartbeat
+replies the estimator sees.  Epochs advance only when the belief
+actually changes, so long stretches of simulated time reuse one set of
+engine caches.
+
 Units: all times are simulated **seconds** on one clock from 0.0.  All
 randomness flows through the single ``rng`` handed to :class:`ClusterSim`
 (attempt dooms, checkpoint abort points, heartbeat replies), so a run is

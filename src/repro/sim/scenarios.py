@@ -31,9 +31,11 @@ import numpy as np
 from repro.cluster.failures import (BernoulliPerJob, CompositeProcess,
                                     CorrelatedOutages, ExponentialLifetimes,
                                     contiguous_racks)
+from repro.cluster.nodes import NodeState
 from repro.cluster.scheduler import Scheduler
 from repro.core.engine import PlacementEngine, PlacementRequest
 from repro.core.fattree import FatTreeTopology
+from repro.core.state import ClusterState
 from repro.core.topology import TorusTopology
 from repro.sim.clustersim import ClusterSim, SimConfig, SimResult
 from repro.sim.network import network_for
@@ -126,10 +128,12 @@ def paper_fig4_5(policies: Sequence[str] = ("linear", "tofa"),
         known = (fm.outage_vector(topo.n_nodes)
                  if scheduler_knows_truth else None)
         wl = wl_factory()
+        known_state = ClusterState.from_arrays(topo.n_nodes, p_f=known)
         for pol in policies:
             rng = np.random.default_rng(seed * 7777 + b)
             plan = engine.place(
-                PlacementRequest(comm=wl.comm, topology=topo, p_f=known),
+                PlacementRequest(comm=wl.comm, topology=topo,
+                                 state=known_state),
                 policy=pol, rng=rng)
             place_time[pol] += plan.wall_time_s
             sch = Scheduler(topo, net=net, engine=engine)
@@ -325,12 +329,14 @@ def correlated_failures(policies: Sequence[str] = ("linear", "tofa"),
     "onto nodes about to fail.")
 def drain_sweep(policies: Sequence[str] = ("linear", "tofa"), seed: int = 0,
                 fast: bool = False,
-                thresholds: Sequence[float] = (0.1, 0.5, 1.01)
-                ) -> dict:
+                thresholds: Sequence[float] = (0.1, 0.5, 1.01),
+                engine: Optional[PlacementEngine] = None) -> dict:
     dims = (4, 4, 4) if fast else (6, 6, 6)     # see correlated-failures
     topo = TorusTopology(dims)
     net = network_for(topo)
-    engine = PlacementEngine()
+    # ``engine`` lets instrumentation (benchmarks/state_churn.py) read
+    # the cache counters the sweep produced
+    engine = engine if engine is not None else PlacementEngine()
     n_flaky = 12 if fast else 40
     rng0 = np.random.default_rng(seed * 401 + 19)
     flaky = rng0.choice(topo.n_nodes, n_flaky, replace=False)
@@ -362,4 +368,63 @@ def drain_sweep(policies: Sequence[str] = ("linear", "tofa"), seed: int = 0,
     return {"name": "drain-sweep",
             "params": {"dims": dims, "n_flaky": n_flaky, "n_jobs": n_jobs,
                        "thresholds": list(thresholds), "seed": seed},
+            "policies": rows}
+
+
+@register_preset(
+    "degraded-drain",
+    "Nodes pass through DEGRADED (allocatable, elevated p_f) before dying, "
+    "while a maintenance rack sits DRAINED: exercises the four-state "
+    "lifecycle the boolean up/down model cannot express.  Fault-aware "
+    "policies route around degraded nodes they are still allowed to use; "
+    "fault-blind ones keep landing on them.")
+def degraded_drain(policies: Sequence[str] = ("linear", "tofa"),
+                   seed: int = 0, fast: bool = False) -> dict:
+    dims = (4, 4, 4) if fast else (6, 6, 6)
+    topo = TorusTopology(dims)
+    net = network_for(topo)
+    engine = PlacementEngine()
+    rack_size = 8 if fast else 27
+    racks = contiguous_racks(topo.n_nodes, rack_size)
+    maintenance = racks[-1]               # administratively drained rack
+    n_flaky = 10 if fast else 32
+    rng0 = np.random.default_rng(seed * 521 + 23)
+    pool = np.setdiff1d(np.arange(topo.n_nodes), maintenance)
+    flaky = rng0.choice(pool, n_flaky, replace=False)
+    n_jobs = 8 if fast else 16
+    factory = mixed_size_factory(sizes=(8, 12) if fast else (16, 27))
+    wls = [factory(np.random.default_rng(seed * 131 + i))
+           for i in range(n_jobs)]
+    # flaky nodes degrade (miss ~30% of heartbeats) and genuinely die
+    # over time; the degraded band keeps them allocatable, so only
+    # fault-aware policies avoid the elevated-p_f capacity
+    proc = ExponentialLifetimes(flaky, mtbf=0.8 if fast else 2.5, mttr=0.5)
+    truth = np.zeros(topo.n_nodes)
+    truth[flaky] = 0.3
+    rows = {}
+    for pol in policies:
+        sch = Scheduler(topo, net=net, engine=engine, seed=seed,
+                        drain_threshold=0.9,       # degrade, don't drain
+                        degraded_threshold=0.1)
+        _converged_monitor(sch, truth, seed)
+        # one heartbeat round promotes the flaky set into DEGRADED and
+        # maintenance puts a whole rack administratively out of service
+        sch.heartbeat_round(np.ones(topo.n_nodes, dtype=bool))
+        sch.registry.mark(maintenance, NodeState.DRAINED)
+        sim = ClusterSim(
+            sch, burst_stream(wls, policy=pol, at=1.0),
+            failure_process=proc,
+            config=SimConfig(heartbeat_interval=0.1,
+                             checkpoint_interval=0.05,
+                             checkpoint_overhead=0.002,
+                             failure_horizon=500.0),
+            rng=np.random.default_rng(seed * 2311 + 37))
+        res = sim.run()
+        rows[pol] = _row(res)
+        rows[pol]["degraded_nodes"] = int(
+            (sch.registry.health_codes() == 1).sum())
+    return {"name": "degraded-drain",
+            "params": {"dims": dims, "n_flaky": n_flaky,
+                       "rack_size": rack_size, "n_jobs": n_jobs,
+                       "seed": seed},
             "policies": rows}

@@ -1,13 +1,19 @@
 #!/usr/bin/env python3
-"""Fail on broken intra-repo markdown links.
+"""Fail on broken intra-repo markdown links and heading anchors.
 
     python tools/check_links.py README.md API.md docs
 
 Scans the given markdown files (directories are walked for ``*.md``) for
 ``[text](target)`` links, resolves relative targets against the linking
 file, and exits 1 listing every target that does not exist.  External
-(``http(s)://``, ``mailto:``) and pure-anchor (``#...``) targets are
-skipped; a ``path#anchor`` target is checked for the path part only.
+(``http(s)://``, ``mailto:``) targets are skipped.
+
+Anchor coverage: a ``path#anchor`` target is checked against the
+headings of the *target* file and a pure ``#anchor`` target against the
+headings of the *linking* file, using GitHub's slug rules (lowercase,
+punctuation stripped, spaces to dashes, ``-1``/``-2`` suffixes for
+duplicates) — so section links in API.md/docs stay valid as the
+documents are refactored.
 """
 from __future__ import annotations
 
@@ -18,6 +24,65 @@ import sys
 # [text](target) — target must not contain spaces or a closing paren;
 # images (![alt](...)) are matched too via the optional leading !
 LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^(#{1,6})\s+(.*?)\s*#*\s*$")
+FENCE_RE = re.compile(r"^(```|~~~)")
+
+
+def github_slug(text: str) -> str:
+    """GitHub's heading -> anchor slug: strip markdown emphasis/code and
+    punctuation, lowercase, spaces to dashes."""
+    # backticks/asterisks are markup; literal underscores survive in
+    # GitHub slugs (it slugs the *rendered* text)
+    text = re.sub(r"[`*]", "", text)
+    text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", text)   # [text](url)
+    text = text.strip().lower()
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def heading_anchors(md: pathlib.Path) -> set[str]:
+    """All anchor slugs a file's headings define (with -N dedup suffixes)."""
+    seen: dict[str, int] = {}
+    anchors: set[str] = set()
+    in_fence = False
+    for line in md.read_text(encoding="utf-8").splitlines():
+        if FENCE_RE.match(line):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        m = HEADING_RE.match(line)
+        if not m:
+            continue
+        slug = github_slug(m.group(2))
+        n = seen.get(slug, 0)
+        seen[slug] = n + 1
+        anchors.add(slug if n == 0 else f"{slug}-{n}")
+    return anchors
+
+
+def check_file(md: pathlib.Path,
+               anchor_cache: dict[pathlib.Path, set[str]]) -> list[str]:
+    def anchors_of(path: pathlib.Path) -> set[str]:
+        path = path.resolve()
+        if path not in anchor_cache:
+            anchor_cache[path] = heading_anchors(path)
+        return anchor_cache[path]
+
+    broken = []
+    for m in LINK_RE.finditer(md.read_text(encoding="utf-8")):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        path, _, anchor = target.partition("#")
+        dest = md if not path else md.parent / path
+        if path and not dest.exists():
+            broken.append(f"{md}: broken link -> {target}")
+            continue
+        if anchor and dest.suffix == ".md" and dest.is_file():
+            if anchor.lower() not in anchors_of(dest):
+                broken.append(f"{md}: broken anchor -> {target}")
+    return broken
 
 
 def iter_md_files(args: list[str]) -> list[pathlib.Path]:
@@ -31,24 +96,12 @@ def iter_md_files(args: list[str]) -> list[pathlib.Path]:
     return out
 
 
-def check_file(md: pathlib.Path) -> list[str]:
-    broken = []
-    for m in LINK_RE.finditer(md.read_text(encoding="utf-8")):
-        target = m.group(1)
-        if target.startswith(("http://", "https://", "mailto:", "#")):
-            continue
-        path = target.split("#", 1)[0]
-        if not path:
-            continue
-        if not (md.parent / path).exists():
-            broken.append(f"{md}: broken link -> {target}")
-    return broken
-
-
 def main(argv: list[str]) -> int:
     files = iter_md_files(argv or ["README.md", "API.md", "docs"])
     missing = [str(f) for f in files if not f.exists()]
-    broken = [b for f in files if f.exists() for b in check_file(f)]
+    anchor_cache: dict[pathlib.Path, set[str]] = {}
+    broken = [b for f in files if f.exists()
+              for b in check_file(f, anchor_cache)]
     for b in missing:
         print(f"missing input file: {b}")
     for b in broken:
@@ -56,7 +109,8 @@ def main(argv: list[str]) -> int:
     if broken or missing:
         print(f"{len(broken) + len(missing)} broken link(s)")
         return 1
-    print(f"ok: {len(files)} file(s), all intra-repo links resolve")
+    print(f"ok: {len(files)} file(s), all intra-repo links and anchors "
+          f"resolve")
     return 0
 
 
