@@ -1,0 +1,222 @@
+"""E10 (beyond paper) — online placement service under a request storm.
+
+Drives :class:`repro.service.service.PlacementService` with an open
+Poisson arrival stream (built on :func:`repro.workloads.arrivals.
+poisson_stream`'s arrival discipline): a mix of interactive inference
+replica sets (KV-shard affinity graphs, admission deadlines), standard
+jobs, and best-effort elastic fillers — while a flaky-node churn process
+takes nodes down mid-run (and repairs them) and heartbeats republish a
+jittered outage belief every poll.  Reported per policy:
+
+* ``placements_per_sec``  — sustained engine throughput over the wall
+                            clock actually spent placing (first
+                            placements + failure re-placements);
+* ``admission_p50_s`` / ``admission_p99_s`` — simulated seconds from
+                            submit to first placement (queue wait +
+                            drain-tick latency);
+* ``completion_p99_s``    — submit-to-completion sojourn including
+                            re-placement restarts, the number fault
+                            awareness must protect under churn;
+* ``hit_rate``            — engine weight/memo cache hit rate; the
+                            busy-overlay route keying must keep this
+                            warm even though every drain tick has a
+                            different lease set.
+
+``--check`` is the CI gate, three conditions: ``tofa`` sustains at least
+``MIN_PLACEMENTS_PER_SEC``, its cache hit rate stays >=
+``MIN_HIT_RATE``, and its p99 completion under churn beats ``linear``
+(same arrivals, same churn, same seeds).  ``--write --label <name>``
+appends a trajectory point to ``benchmarks/BENCH_serve.json``.
+
+    PYTHONPATH=src python -m benchmarks.serve_storm [--fast] [--check]
+    PYTHONPATH=src python -m benchmarks.serve_storm --write --label pr6
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import pathlib
+import sys
+import time
+
+import numpy as np
+
+from repro.core.topology import TorusTopology
+from repro.service import (PlacementService, SLOClass, elastic_request,
+                           replica_request)
+from repro.workloads.arrivals import mixed_size_factory, poisson_stream
+
+BENCH_PATH = pathlib.Path(__file__).parent / "BENCH_serve.json"
+MIN_PLACEMENTS_PER_SEC = 50.0
+MIN_HIT_RATE = 0.90
+POLICIES = ("tofa", "linear")
+
+
+def build_stream(n_req: int, rate: float, seed: int,
+                 deadline_slack: float = 60.0) -> list:
+    """The storm: Poisson arrivals, one third interactive replica sets
+    (deadline-bounded), one third standard jobs, one third best-effort
+    fillers (the preemption victim pool).  Rebuilding with one seed gives
+    byte-identical workloads and arrival times across policies."""
+    rng = np.random.default_rng(seed)
+    specs = poisson_stream(mixed_size_factory((8, 12, 18)), rate, n_req,
+                           rng, max_duration=None)
+    reqs = []
+    for i, spec in enumerate(specs):
+        t = spec.submit_time
+        if i % 3 == 0:
+            reqs.append(replica_request(
+                shard_bytes=2e8, n_replicas=2, shards_per_replica=3,
+                slo=SLOClass.INTERACTIVE, submit_time=t,
+                deadline=t + deadline_slack))
+        elif i % 3 == 1:
+            reqs.append(elastic_request(spec.workload,
+                                        slo=SLOClass.STANDARD,
+                                        submit_time=t))
+        else:
+            reqs.append(elastic_request(spec.workload,
+                                        slo=SLOClass.BEST_EFFORT,
+                                        submit_time=t))
+    return reqs
+
+
+def build_churn(topo, n_flaky: int, seed: int, horizon: float,
+                churn_every: float, repair_after: float,
+                per_event: int = 1):
+    """Flaky node set (elevated heartbeat belief) and the failure /
+    recovery schedule drawn from it — the adversarial case fault-aware
+    placement is supposed to win: churn strikes exactly the nodes the
+    belief flags.  ``per_event`` nodes go down together at each event
+    (one epoch mint per event either way).
+
+    The flaky nodes are drawn from the busiest *half* of the id range:
+    churn on nodes no placement ever uses distinguishes nothing, so the
+    bad region sits where allocator traffic actually lands — a
+    fault-blind packer walks straight into it, a fault-aware one reads
+    the belief and steers around it."""
+    rng = np.random.default_rng(seed * 211 + 7)
+    flaky = np.sort(rng.choice(topo.n_nodes // 2, n_flaky, replace=False))
+    belief = np.zeros(topo.n_nodes)
+    belief[flaky] = 0.3
+    failures, recoveries = [], []
+    t = churn_every
+    k = 0
+    while t < horizon:
+        victims = [int(flaky[(k + j) % len(flaky)])
+                   for j in range(per_event)]
+        failures.append((t, victims))
+        recoveries.append((t + repair_after, victims))
+        t += churn_every
+        k += per_event
+    return flaky, belief, failures, recoveries
+
+
+def run_storm(fast: bool = False, seed: int = 0) -> dict:
+    """One storm per policy on identical streams; returns the bench row."""
+    dims = (4, 4, 4) if fast else (6, 6, 6)
+    n_req = 150 if fast else 600
+    rate = 10.0 if not fast else 5.0
+    horizon_guess = n_req / rate + 60.0
+    topo = TorusTopology(dims)
+    flaky, belief, failures, recoveries = build_churn(
+        topo, n_flaky=8 if fast else 24, seed=seed,
+        horizon=horizon_guess, churn_every=5.0, repair_after=15.0,
+        per_event=1 if fast else 4)
+    rows = {}
+    for policy in POLICIES:
+        svc = PlacementService(topo, policy=policy, seed=seed,
+                               drain_interval=0.25, restart_delay=1.0)
+        reqs = build_stream(n_req, rate, seed)
+        res = svc.run(reqs, failures=failures, recoveries=recoveries,
+                      heartbeat_interval=0.5, belief=belief,
+                      belief_jitter=0.3)
+        rows[policy] = dict(res.row, policy=policy)
+    return {
+        "dims": list(dims),
+        "n_requests": n_req,
+        "rate_jobs_per_s": rate,
+        "n_flaky": int(len(flaky)),
+        "churn_events": len(failures),
+        "policies": rows,
+    }
+
+
+def run(csv=print, fast: bool | None = None, seed: int = 0) -> dict:
+    if fast is None:        # benchmarks.run harness passes --fast via env
+        fast = bool(int(os.environ.get("FAST", "0")))
+    t0 = time.perf_counter()
+    row = run_storm(fast=fast, seed=seed)
+    wall = time.perf_counter() - t0
+    for policy, r in row["policies"].items():
+        csv(f"serve_storm,{policy},placements_per_sec,"
+            f"{r['placements_per_sec']:.1f},1/s,"
+            f"placed={r['placed']},replaced={r['replaced']},"
+            f"hit_rate={r['hit_rate']:.4f}")
+        csv(f"serve_storm,{policy},admission_p99_s,"
+            f"{r['admission_p99_s']:.3f},s,p50={r['admission_p50_s']:.3f}")
+        csv(f"serve_storm,{policy},completion_p99_s,"
+            f"{r['completion_p99_s']:.2f},s,p50={r['completion_p50_s']:.2f},"
+            f"completed={r['completed']},shed={r['shed']},"
+            f"preempted={r['preempted']}")
+    csv(f"serve_storm,storm,wall_time,{wall:.1f},s,"
+        f"n_requests={row['n_requests']},churn={row['churn_events']}")
+    return row
+
+
+def check(row: dict) -> int:
+    tofa = row["policies"]["tofa"]
+    linear = row["policies"]["linear"]
+    rc = 0
+    pps = tofa["placements_per_sec"]
+    ok = pps >= MIN_PLACEMENTS_PER_SEC
+    print(f"GATE serve_storm throughput: placements_per_sec={pps:.1f} "
+          f"(floor {MIN_PLACEMENTS_PER_SEC}) {'OK' if ok else 'FAIL'}")
+    rc |= 0 if ok else 1
+    hr = tofa["hit_rate"]
+    ok = hr >= MIN_HIT_RATE
+    print(f"GATE serve_storm cache: hit_rate={hr:.4f} "
+          f"(floor {MIN_HIT_RATE}) {'OK' if ok else 'FAIL'}")
+    rc |= 0 if ok else 1
+    tp, lp = tofa["completion_p99_s"], linear["completion_p99_s"]
+    ok = math.isfinite(tp) and tp > 0 and tp < lp
+    print(f"GATE serve_storm churn resilience: tofa p99 completion "
+          f"{tp:.2f}s vs linear {lp:.2f}s {'OK' if ok else 'FAIL'}")
+    rc |= 0 if ok else 1
+    return rc
+
+
+def write_trajectory(row: dict, label: str, fast: bool) -> None:
+    doc = {"schema": 1,
+           "gate": {"min_placements_per_sec": MIN_PLACEMENTS_PER_SEC,
+                    "min_hit_rate": MIN_HIT_RATE,
+                    "p99_completion": "tofa < linear"},
+           "trajectory": []}
+    if BENCH_PATH.exists():
+        doc = json.loads(BENCH_PATH.read_text())
+    doc["trajectory"].append({"label": label, "fast": fast, "storm": row})
+    BENCH_PATH.write_text(json.dumps(doc, indent=1) + "\n")
+    print(f"appended trajectory point {label!r} to {BENCH_PATH}")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero when a storm gate fails "
+                         "(throughput floor, cache hit rate, tofa p99 "
+                         "completion beating linear)")
+    ap.add_argument("--write", action="store_true",
+                    help="append a point to BENCH_serve.json")
+    ap.add_argument("--label", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    row = run(fast=bool(args.fast), seed=args.seed)
+    if args.write:
+        write_trajectory(row, args.label or "unlabeled", bool(args.fast))
+    return check(row) if args.check else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -82,6 +82,8 @@ class JobRecord:
     runtime: float = 0.0
     restarts: int = 0
     requeues: int = 0                   # times bounced back to the queue
+    enqueue_time: float = 0.0           # scheduler clock at enqueue
+    start_time: float = -1.0            # scheduler clock at first start
 
 
 class Scheduler:
@@ -134,6 +136,16 @@ class Scheduler:
         # queue drains and fault-driven re-placements (benchmarked per
         # scenario in benchmarks/clustersim.py)
         self.place_time_s: float = 0.0
+        # simulated-seconds clock, advanced by the event simulator before
+        # each handler (direct callers may leave it at 0.0 — admission
+        # waits then read as abstract rounds).  Feeds the queue-depth and
+        # admission-latency counters reported by :meth:`stats`.
+        self.clock: float = 0.0
+        self.peak_queue_depth: int = 0
+        self.n_enqueued: int = 0
+        self.n_started: int = 0
+        self._wait_total_s: float = 0.0
+        self._wait_max_s: float = 0.0
 
     # -------------------------------------------------------------- health
     def cluster_state(self) -> ClusterState:
@@ -241,9 +253,11 @@ class Scheduler:
         """Append to the pending queue without draining it — for callers
         (the event simulator) that need :meth:`schedule_pending`'s list
         of started records themselves."""
-        rec = JobRecord(job=job)
+        rec = JobRecord(job=job, enqueue_time=self.clock)
         self.records[job.job_id] = rec
         self.queue.append(job)
+        self.n_enqueued += 1
+        self.peak_queue_depth = max(self.peak_queue_depth, len(self.queue))
         return rec
 
     def submit(self, job: Job) -> JobRecord:
@@ -303,6 +317,12 @@ class Scheduler:
             rec = self.records[job.job_id]
             rec.placement = plan
             rec.state = "running"
+            if rec.start_time < 0:
+                rec.start_time = self.clock
+                wait = max(0.0, self.clock - rec.enqueue_time)
+                self.n_started += 1
+                self._wait_total_s += wait
+                self._wait_max_s = max(self._wait_max_s, wait)
             rec.runtime = successful_runtime(job.workload, plan.placement,
                                              self.net)
             self.allocated[job.job_id] = np.asarray(plan.placement,
@@ -391,3 +411,23 @@ class Scheduler:
         self.records[job_id].state = "done"
         self.allocated.pop(job_id, None)
         return self.schedule_pending()
+
+    # -------------------------------------------------------------- stats
+    def stats(self) -> dict:
+        """Queueing and admission-latency counters of this scheduler.
+
+        Waits are measured on :attr:`clock` (simulated seconds when the
+        event simulator drives it, abstract otherwise) from enqueue to
+        *first* start — requeues after a failure do not reset the clock,
+        matching how users experience time-to-start."""
+        return {
+            "queue_depth": len(self.queue),
+            "peak_queue_depth": self.peak_queue_depth,
+            "n_enqueued": self.n_enqueued,
+            "n_started": self.n_started,
+            "admission_wait_total_s": self._wait_total_s,
+            "admission_wait_max_s": self._wait_max_s,
+            "admission_wait_mean_s": (self._wait_total_s / self.n_started
+                                      if self.n_started else 0.0),
+            "place_time_s": self.place_time_s,
+        }

@@ -170,6 +170,22 @@ class PlacementRequest:
         s = None if self.straggler is None else self.straggler.tobytes()
         return (self.state.key, s)
 
+    @property
+    def route_health_key(self) -> tuple:
+        """Cache token for route-weight derivations: like
+        :attr:`health_key` but ignoring busy-flavored overlay masks
+        (``state.route_key``) — busy nodes are valid routers, so requests
+        that differ only in who holds a lease share one weight matrix."""
+        s = None if self.straggler is None else self.straggler.tobytes()
+        return (self.state.route_key, s)
+
+    def route_p_f(self) -> np.ndarray:
+        """Outage vector as the Eq. 1 weight derivation sees it: failed /
+        drained / down pinned to 1.0, busy-flavored overlay nodes kept at
+        their base belief (identical to :meth:`effective_p_f` for every
+        request without a busy-flavored overlay)."""
+        return self.state.route_outage_vector()
+
     def effective_p_f(self) -> np.ndarray:
         """Outage vector as the mapper sees it: unavailable nodes are
         certain outages (pinned to 1.0) regardless of the heartbeat view."""
@@ -181,10 +197,13 @@ class PlacementRequest:
             p[mask] = 1.0
         return p
 
-    def restrict(self, busy) -> "PlacementRequest":
+    def restrict(self, busy, *, route_faulty: bool = True
+                 ) -> "PlacementRequest":
         """This request minus ``busy`` nodes (exclusive-allocation
-        threading).  State-built requests get a cheap overlay; shim
-        requests keep their verbatim availability order."""
+        threading).  State-built requests get a cheap overlay — fault
+        flavored by default, busy flavored (weight caches keep keying on
+        the base health) with ``route_faulty=False``; shim requests keep
+        their verbatim availability order."""
         busy = np.atleast_1d(np.asarray(busy, dtype=np.int64))
         if not busy.size:
             return self
@@ -198,7 +217,8 @@ class PlacementRequest:
                 metric=self.metric, seed=self.seed)
         return PlacementRequest(
             comm=self.comm, topology=self.topology,
-            state=self.state.overlay(unavailable=busy),
+            state=self.state.overlay(unavailable=busy,
+                                     route_faulty=route_faulty),
             straggler=self.straggler, metric=self.metric, seed=self.seed)
 
 
@@ -322,10 +342,15 @@ class PlacementEngine:
 
     def _weights_for(self, topo: Topology,
                      request: PlacementRequest,
-                     p_f_eff: np.ndarray) -> np.ndarray:
-        """Weight matrix for a request, epoch-keyed on its health state."""
-        key = (self._topo_key(topo),) + request.health_key
-        return self._weights_cached(topo, key, p_f_eff, request.straggler)
+                     p_f_route: np.ndarray) -> np.ndarray:
+        """Weight matrix for a request, epoch-keyed on its health state.
+
+        Keys on the *route* health key: requests that differ only in a
+        busy-flavored overlay (the service's lease churn) share one
+        matrix per health epoch.  ``p_f_route`` must be the matching
+        :meth:`PlacementRequest.route_p_f` vector."""
+        key = (self._topo_key(topo),) + request.route_health_key
+        return self._weights_cached(topo, key, p_f_route, request.straggler)
 
     def _weights_cached(self, topo: Topology, key,
                         p_f: Optional[np.ndarray],
@@ -401,8 +426,11 @@ class PlacementEngine:
         return self._shared_cached(key)
 
     def _shared_for(self, topo: Topology, request: PlacementRequest) -> dict:
+        # scoped per route health key (one dict per epoch under lease
+        # churn); availability-dependent entries are disambiguated inside
+        # the dict by PolicyContext.avail_token
         return self._shared_cached(
-            (self._topo_key(topo),) + request.health_key)
+            (self._topo_key(topo),) + request.route_health_key)
 
     def _shared_cached(self, key) -> dict:
         if key in self._shared:
@@ -450,6 +478,7 @@ class PlacementEngine:
         t0 = time.perf_counter()
         topo = request.topology
         p_f = request.effective_p_f()
+        route_p = request.route_p_f()
         ctx = PolicyContext(
             request=request,
             G_w=request.comm.weights(request.metric),
@@ -458,8 +487,9 @@ class PlacementEngine:
             p_f=p_f,
             available=request.available_ids,
             rng=rng,
-            _weights_fn=lambda: self._weights_for(topo, request, p_f),
+            _weights_fn=lambda: self._weights_for(topo, request, route_p),
             shared=self._shared_for(topo, request),
+            avail_token=request.state.key,
         )
         out = pol.place(ctx)
         wall = time.perf_counter() - t0
@@ -480,7 +510,8 @@ class PlacementEngine:
     def place_many(self, requests: Sequence[PlacementRequest],
                    policy: Union[str, Sequence[str], None] = None,
                    *, rng: Optional[np.random.Generator] = None,
-                   exclusive: bool = False) -> list[PlacementPlan]:
+                   exclusive: bool = False,
+                   route_faulty: bool = True) -> list[PlacementPlan]:
         """Batched placement: one plan per request, in request order.
 
         Produces exactly the plans the equivalent sequence of
@@ -504,7 +535,11 @@ class PlacementEngine:
         state — to nodes no earlier plan in the batch occupies (Slurm's
         exclusive node allocation).  Raises ``ValueError`` — like the
         equivalent sequential validation would — if a request no longer
-        fits in what remains.
+        fits in what remains.  ``route_faulty`` picks the overlay flavor
+        the intra-batch restriction uses: the default treats occupied
+        nodes as certain outages (historical behavior); the placement
+        service passes ``False`` so occupied nodes stay valid routers and
+        the whole drain tick shares epoch-keyed weight matrices.
         """
         requests = list(requests)
         if policy is None or isinstance(policy, str):
@@ -522,7 +557,7 @@ class PlacementEngine:
                 if exclusive:
                     busy = taken.get(key)
                     if busy is not None and busy.size:
-                        req = req.restrict(busy)
+                        req = req.restrict(busy, route_faulty=route_faulty)
                 plan = self._place(req, policy=pol, rng=rng)
                 plans.append(plan)
                 if exclusive:
@@ -653,8 +688,9 @@ class PlacementEngine:
             p_f=p_eff,
             available=new_avail,
             rng=rng if rng is not None else np.random.default_rng(req.seed),
+            avail_token=new_req.state.key,
         )
-        W = self._weights_for(req.topology, new_req, p_eff)
+        W = self._weights_for(req.topology, new_req, new_req.route_p_f())
         ctx._weights = W
         used = np.zeros(req.n_nodes, dtype=bool)
         kept = np.ones(len(placement), dtype=bool)

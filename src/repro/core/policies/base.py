@@ -54,12 +54,21 @@ class PolicyContext:
     # snapshot skip re-deriving them.  None when no engine cache backs the
     # call (ad-hoc contexts in tests).
     shared: Optional[dict] = None
+    # disambiguates availability inside a shared dict: the engine scopes
+    # shared dicts per *route* health key (so busy-overlay churn reuses one
+    # dict per epoch), and every memo entry is namespaced by this token —
+    # the request state's full key — because candidate node sets depend on
+    # which nodes are currently selectable, not just on route weights.
+    avail_token: Optional[tuple] = None
 
     def memo(self, key, fn: Callable[[], object]):
-        """Return ``fn()`` memoised under ``key`` in the engine-scoped
-        ``shared`` dict (or uncached when no dict was provided)."""
+        """Return ``fn()`` memoised under ``(key, avail_token)`` in the
+        engine-scoped ``shared`` dict (or uncached when no dict was
+        provided).  The availability namespace keeps entries correct when
+        one shared dict serves many busy-overlay views of one epoch."""
         if self.shared is None:
             return fn()
+        key = (key, self.avail_token)
         if key not in self.shared:
             self.shared[key] = fn()
         return self.shared[key]

@@ -20,7 +20,15 @@ first-class value:
   made unallocatable (busy allocations, freshly failed nodes) without
   minting a new epoch: the derived key is ``(base key, digest of the
   masked set)``, so repeated placements against the same base state and
-  busy set stay warm.
+  busy set stay warm.  Overlays come in two flavors: the default
+  (``route_faulty=True``) treats masked nodes exactly like certain
+  outages — routes through them are penalized by Eq. 1, the right model
+  for *failed* nodes — while ``route_faulty=False`` marks nodes merely
+  *busy*: excluded from selection, but still perfectly good routers, so
+  the route-weight matrix (and its :attr:`route_key` cache token) stays
+  that of the base state.  A serving loop whose busy set changes every
+  drain tick keeps one weight matrix per health epoch instead of one
+  per busy digest (see :mod:`repro.service.service`).
 * **Diffs.**  :meth:`diff` returns exactly the node ids whose effective
   health changed between two states — what incremental re-placement and
   row-wise weight-matrix updates consume.
@@ -87,6 +95,9 @@ class ClusterState:
     key: tuple                         # cache token; equal key == equal health
     groups: Optional[tuple[tuple[int, ...], ...]] = None  # rack membership
     masked: Optional[np.ndarray] = None   # overlay-unavailable bool mask
+    # busy-flavored overlay mask: unallocatable for *selection* but still a
+    # valid router (route weights and route_key come from the base health)
+    masked_busy: Optional[np.ndarray] = None
 
     # ------------------------------------------------------------ factories
     @classmethod
@@ -149,7 +160,7 @@ class ClusterState:
 
     @property
     def is_overlay(self) -> bool:
-        return self.masked is not None
+        return self.masked is not None or self.masked_busy is not None
 
     def snapshot(self) -> "ClusterState":
         """The O(1) immutable handle — the state itself."""
@@ -160,6 +171,8 @@ class ClusterState:
         m = self.health <= np.int8(NodeHealth.DEGRADED)
         if self.masked is not None:
             m = m & ~self.masked
+        if self.masked_busy is not None:
+            m = m & ~self.masked_busy
         return m
 
     def available_ids(self) -> np.ndarray:
@@ -169,12 +182,41 @@ class ClusterState:
     def outage_vector(self) -> np.ndarray:
         """Belief with non-allocatable nodes pinned to certain outage (1.0).
 
-        This is the vector the mapper consumes: Eq. 1 treats a busy,
-        drained or down node exactly like a certain failure, steering
-        routes away from it."""
+        This is the vector node *selection* consumes: no policy may place
+        a process on a busy, drained or down node, so all of them read as
+        certain outages here."""
         p = self.p_f.copy()
         p[~self.allocatable_mask()] = 1.0
         return p
+
+    def route_outage_vector(self) -> np.ndarray:
+        """Belief as the Eq. 1 *route-weight* derivation consumes it.
+
+        Lifecycle-unallocatable (DRAINED/DOWN) and fault-flavored overlay
+        nodes are pinned to 1.0 — routes through them are penalized — but
+        busy-flavored overlay nodes keep their base belief: an occupied
+        node is a perfectly good router.  Equal :attr:`route_key` implies
+        an equal result of this method."""
+        p = self.p_f.copy()
+        m = self.health <= np.int8(NodeHealth.DEGRADED)
+        if self.masked is not None:
+            m = m & ~self.masked
+        p[~m] = 1.0
+        return p
+
+    @property
+    def route_key(self) -> tuple:
+        """Cache token for route-weight derivations: ignores busy-flavored
+        masks, so every drain tick of a serving loop — each with a
+        different busy set — shares one weight matrix per health epoch.
+        Equals :attr:`key` when no busy mask is present; equals the key of
+        the same overlay without its busy mask otherwise."""
+        if self.masked_busy is None:
+            return self.key          # base state or faulty-only overlay
+        base_key = self.key[1]       # ("ob", base_key, f_digest, b_digest)
+        if self.masked is None:
+            return base_key
+        return ("o", base_key, np.flatnonzero(self.masked).tobytes())
 
     def health_of(self, node_id: int) -> NodeHealth:
         return NodeHealth(int(self.health[node_id]))
@@ -238,31 +280,53 @@ class ClusterState:
         return self.evolve(p_f=p_f, atol=atol)
 
     # -------------------------------------------------------------- overlay
-    def overlay(self, unavailable=()) -> "ClusterState":
+    def overlay(self, unavailable=(), *,
+                route_faulty: bool = True) -> "ClusterState":
         """Derived view with extra nodes made unallocatable.
 
-        O(n) to build, no new epoch: the key is ``("o", base key,
-        digest)``, so two overlays of one base with the same masked set
-        share every epoch-keyed cache entry.  Used for busy allocations
-        (``place_many`` exclusive threading) and freshly failed nodes
-        (``engine.replace``).  Overlaying an overlay composes the masks
-        against the same base.
+        O(n) to build, no new epoch: the key digests the masked sets, so
+        two overlays of one base with the same masks share every
+        epoch-keyed cache entry.  ``route_faulty`` picks the flavor:
+
+        * ``True`` (default) — the nodes are treated as certain outages
+          end to end: excluded from selection *and* penalized in the
+          Eq. 1 route weights.  The right model for freshly **failed**
+          nodes (``engine.replace``), and the historical behavior of
+          every overlay.
+        * ``False`` — the nodes are merely **busy**: excluded from
+          selection, but still valid routers.  :attr:`route_key` and
+          :meth:`route_outage_vector` ignore them, so route-weight
+          caches key on the base health epoch — the property the online
+          placement service relies on under lease churn.
+
+        Overlaying an overlay composes each flavor's mask against the
+        same base; the two flavors compose independently.
         """
         extra = np.atleast_1d(np.asarray(unavailable, dtype=np.int64))
         if extra.size == 0:
             return self
         if extra.min() < 0 or extra.max() >= self.n_nodes:
             raise ValueError(f"node ids out of range [0, {self.n_nodes})")
-        mask = (np.zeros(self.n_nodes, dtype=bool) if self.masked is None
-                else self.masked.copy())
+        prev = self.masked if route_faulty else self.masked_busy
+        mask = (np.zeros(self.n_nodes, dtype=bool) if prev is None
+                else prev.copy())
         mask[extra] = True
-        if self.masked is not None and np.array_equal(mask, self.masked):
+        if prev is not None and np.array_equal(mask, prev):
             return self
-        base_key = self.key[1] if self.is_overlay else self.key
-        digest = np.flatnonzero(mask).tobytes()
+        faulty = _ro(mask) if route_faulty else self.masked
+        busy = self.masked_busy if route_faulty else _ro(mask)
+        base_key = (self.key if not self.is_overlay
+                    else self.key[1])
+        f_digest = (None if faulty is None
+                    else np.flatnonzero(faulty).tobytes())
+        b_digest = (None if busy is None
+                    else np.flatnonzero(busy).tobytes())
+        key = (("o", base_key, f_digest) if busy is None
+               else ("ob", base_key, f_digest, b_digest))
         return ClusterState(health=self.health, p_f=self.p_f,
-                            epoch=self.epoch, key=("o", base_key, digest),
-                            groups=self.groups, masked=_ro(mask))
+                            epoch=self.epoch, key=key,
+                            groups=self.groups, masked=faulty,
+                            masked_busy=busy)
 
     # ----------------------------------------------------------------- diff
     def diff(self, other: "ClusterState") -> "StateDiff":

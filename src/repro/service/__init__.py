@@ -1,0 +1,37 @@
+"""Online fault-aware placement service for serving traffic.
+
+The batch path (:mod:`repro.cluster.scheduler`, :mod:`repro.sim.clustersim`)
+places MPI jobs once per submission; this package stands up the serving
+counterpart the ROADMAP names: a long-running, event-driven service that
+admits a continuous stream of placement requests — inference replicas with
+their KV-cache shards, plus small elastic jobs — and places them on the
+same fault-aware topology with interactive latency.
+
+Modules:
+
+* :mod:`~repro.service.requests` — typed :class:`ServiceRequest` /
+  :class:`ServiceReply` with SLO class, deadline, replica structure, and
+  KV-shard affinity derived from :mod:`repro.serve.kvcache` cache schemas.
+* :mod:`~repro.service.queue` — SLO-aware admission: per-class priority
+  lanes, deadline (EDF) ordering, load shedding.
+* :mod:`~repro.service.service` — the event loop: one versioned
+  :class:`~repro.core.state.ClusterState`, batched ``place_many`` drain
+  ticks, heartbeat/failure-driven re-placement, preemption, elastic
+  resize.
+* :mod:`~repro.service.metrics` — latency histograms, queue depth,
+  placements/sec, preemption/re-placement counters (BENCH-shaped JSON).
+"""
+from repro.service.metrics import LatencyHistogram, ServiceMetrics
+from repro.service.queue import AdmissionQueue
+from repro.service.requests import (ReplicaSpec, ServiceReply,
+                                    ServiceRequest, SLOClass,
+                                    elastic_request, kv_shard_bytes,
+                                    replica_request)
+from repro.service.service import PlacementService, ServiceResult
+
+__all__ = [
+    "SLOClass", "ServiceRequest", "ServiceReply", "ReplicaSpec",
+    "replica_request", "elastic_request", "kv_shard_bytes",
+    "AdmissionQueue", "ServiceMetrics", "LatencyHistogram",
+    "PlacementService", "ServiceResult",
+]

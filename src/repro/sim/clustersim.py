@@ -245,6 +245,8 @@ class ClusterSim:
                 truncated = True
                 break
             ev = Q.pop()
+            # the scheduler's admission-latency counters read this clock
+            self.sch.clock = ev.time
             if self.cfg.trace:
                 self._trace.append((ev.time, ev.type.name, repr(ev.data)))
             dispatch[ev.type](ev)

@@ -46,6 +46,8 @@ def serial_stream(workloads: Sequence[Workload], policy: str = "tofa",
     """The paper's batch discipline: instance i+1 is submitted the moment
     instance i completes.  With ``fixed_placement`` every instance reuses
     one placement (the paper computes placement once per batch)."""
+    if not workloads:
+        raise ValueError("serial_stream needs at least one workload")
     out = []
     for i, wl in enumerate(workloads):
         out.append(JobSpec(wl, policy=policy, submit_time=0.0,
@@ -59,6 +61,10 @@ def burst_stream(workloads: Sequence[Workload], policy: str = "tofa",
                  at: float = 0.0) -> list[JobSpec]:
     """Saturation discipline: every job submitted at the same instant —
     the queue starts full and drains against capacity."""
+    if not workloads:
+        raise ValueError("burst_stream needs at least one workload")
+    if at < 0:
+        raise ValueError(f"submit instant must be >= 0, got {at}")
     return [JobSpec(wl, policy=policy, submit_time=at, name=f"{wl.name}#{i}")
             for i, wl in enumerate(workloads)]
 
@@ -66,13 +72,28 @@ def burst_stream(workloads: Sequence[Workload], policy: str = "tofa",
 def poisson_stream(workload_factory: Callable[[np.random.Generator],
                                               Workload],
                    rate: float, n_jobs: int, rng: np.random.Generator,
-                   policy: str = "tofa") -> list[JobSpec]:
+                   policy: str = "tofa",
+                   max_duration: Optional[float] = None) -> list[JobSpec]:
     """Open-arrival discipline: exponential inter-arrival times with mean
-    ``1 / rate`` jobs/second; each job drawn from ``workload_factory``."""
+    ``1 / rate`` jobs/second; each job drawn from ``workload_factory``.
+
+    ``max_duration`` caps the arrival window in simulated seconds: the
+    stream stops at the first arrival past the cap (so it may hold fewer
+    than ``n_jobs`` specs) — the storm benchmark uses this to bound an
+    open-loop run independently of the sampled inter-arrival draws."""
+    if not (rate > 0) or not np.isfinite(rate):
+        raise ValueError(f"arrival rate must be a finite value > 0 "
+                         f"jobs/second, got {rate}")
+    if n_jobs < 1:
+        raise ValueError(f"n_jobs must be >= 1, got {n_jobs}")
+    if max_duration is not None and max_duration <= 0:
+        raise ValueError(f"max_duration must be > 0, got {max_duration}")
     t = 0.0
     out = []
     for i in range(n_jobs):
         t += float(rng.exponential(1.0 / rate))
+        if max_duration is not None and t > max_duration:
+            break
         wl = workload_factory(rng)
         out.append(JobSpec(wl, policy=policy, submit_time=t,
                            name=f"{wl.name}#{i}"))
@@ -86,8 +107,14 @@ def mixed_size_factory(sizes: Sequence[int] = (8, 27, 64),
     pattern (regular halo vs irregular DAG) at random — small frequent
     jobs alongside wide rare ones, the mix that exercises backfill."""
     sizes = list(sizes)
+    if not sizes:
+        raise ValueError("mixed_size_factory needs at least one size")
     w = None if weights is None else np.asarray(weights, float)
     if w is not None:
+        if len(w) != len(sizes) or (w < 0).any() or w.sum() <= 0:
+            raise ValueError(
+                f"weights must be {len(sizes)} nonnegative values with a "
+                f"positive sum")
         w = w / w.sum()
 
     def factory(rng: np.random.Generator) -> Workload:

@@ -1,0 +1,437 @@
+"""Tests for the online placement service (repro.service) and its
+satellite changes (arrival validation, scheduler admission counters)."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.cluster.scheduler import Job, Scheduler
+from repro.core.state import NodeHealth
+from repro.core.topology import TorusTopology
+from repro.service import (AdmissionQueue, LatencyHistogram,
+                           PlacementService, ReplicaSpec, SLOClass,
+                           elastic_request, kv_shard_bytes,
+                           replica_request)
+from repro.workloads.arrivals import (burst_stream, mixed_size_factory,
+                                      poisson_stream, serial_stream)
+from repro.workloads.patterns import halo3d, npb_dt_like
+
+
+def small_service(seed=0, dims=(3, 3, 3), **kw):
+    return PlacementService(TorusTopology(dims), seed=seed,
+                            drain_interval=0.25, restart_delay=0.5, **kw)
+
+
+# ---------------------------------------------------------------------------
+# requests
+# ---------------------------------------------------------------------------
+
+class TestRequests:
+    def test_replica_workload_layout(self):
+        spec = ReplicaSpec(shards_per_replica=3, shard_bytes=1e8)
+        wl = spec.workload(2)
+        assert spec.ranks_per_replica == 4
+        assert wl.n_ranks == 8
+        G = wl.comm.G_v
+        # engine<->shard edges are the heavy ones inside each replica
+        assert G[0, 1] > 0 and G[4, 5] > 0
+        # engine-engine sync exists but is far lighter than KV traffic
+        assert 0 < G[0, 4] < G[0, 1]
+        # no traffic between different replicas' shards
+        assert G[1, 5] == 0
+
+    def test_kv_shard_bytes_scaling(self):
+        from repro.configs.registry import get_arch
+        cfg = get_arch("smollm-135m")
+        one = kv_shard_bytes(cfg, batch=8, max_seq=4096, shards=1)
+        four = kv_shard_bytes(cfg, batch=8, max_seq=4096, shards=4)
+        assert one > 0 and one / four == pytest.approx(4.0)
+        # GQA cache: k+v, each (L, B, Hkv, S, hd) at bf16 (2 bytes)
+        assert one == pytest.approx(
+            2 * cfg.n_layers * 8 * cfg.n_kv_heads * 4096
+            * cfg.head_dim_ * 2, rel=0.01)
+
+    def test_request_validation(self):
+        wl = npb_dt_like(8)
+        with pytest.raises(ValueError, match="deadline"):
+            elastic_request(wl, submit_time=5.0, deadline=1.0)
+        with pytest.raises(ValueError, match="hold_time"):
+            elastic_request(wl, hold_time=0.0)
+        with pytest.raises(ValueError, match="shards"):
+            kv_shard_bytes(None, 1, 1, shards=0)
+
+    def test_req_ids_unique(self):
+        a = elastic_request(npb_dt_like(8))
+        b = elastic_request(npb_dt_like(8))
+        assert a.req_id != b.req_id
+
+
+# ---------------------------------------------------------------------------
+# admission queue
+# ---------------------------------------------------------------------------
+
+class TestAdmissionQueue:
+    def test_slo_lane_ordering(self):
+        q = AdmissionQueue()
+        wl = npb_dt_like(8)
+        be = elastic_request(wl, slo=SLOClass.BEST_EFFORT)
+        st = elastic_request(wl, slo=SLOClass.STANDARD)
+        ia = elastic_request(wl, slo=SLOClass.INTERACTIVE)
+        for r in (be, st, ia):
+            assert q.push(r, now=0.0)
+        batch = q.drain(now=0.0, capacity=100)
+        assert [r.req_id for r in batch] == [ia.req_id, st.req_id,
+                                             be.req_id]
+
+    def test_edf_within_lane(self):
+        q = AdmissionQueue()
+        wl = npb_dt_like(8)
+        late = elastic_request(wl, slo=SLOClass.STANDARD, deadline=50.0)
+        soon = elastic_request(wl, slo=SLOClass.STANDARD, deadline=10.0)
+        q.push(late, 0.0)
+        q.push(soon, 0.0)
+        assert q.head(SLOClass.STANDARD).req_id == soon.req_id
+        assert [r.req_id for r in q.drain(0.0, 100)] == [soon.req_id,
+                                                         late.req_id]
+
+    def test_deadline_shedding(self):
+        q = AdmissionQueue()
+        wl = npb_dt_like(8)
+        r1 = elastic_request(wl, deadline=5.0)
+        r2 = elastic_request(wl, deadline=50.0)
+        q.push(r1, 0.0)
+        q.push(r2, 0.0)
+        shed = q.shed_expired(now=10.0)
+        assert [r.req_id for r in shed] == [r1.req_id]
+        assert q.depth == 1
+        # an already-expired request is never admitted
+        assert not q.push(elastic_request(wl, deadline=15.0), now=15.0)
+
+    def test_bounded_depth_rejects(self):
+        q = AdmissionQueue(max_depth=1)
+        wl = npb_dt_like(8)
+        assert q.push(elastic_request(wl), 0.0)
+        assert not q.push(elastic_request(wl), 0.0)
+        assert q.peak_depth == 1
+        with pytest.raises(ValueError):
+            AdmissionQueue(max_depth=0)
+
+    def test_capacity_backfill(self):
+        q = AdmissionQueue()
+        wide = elastic_request(npb_dt_like(16), slo=SLOClass.STANDARD)
+        narrow = elastic_request(npb_dt_like(4), slo=SLOClass.BEST_EFFORT)
+        q.push(wide, 0.0)
+        q.push(narrow, 0.0)
+        batch = q.drain(0.0, capacity=8)   # wide blocked, narrow slips by
+        assert [r.req_id for r in batch] == [narrow.req_id]
+        assert q.depth == 1
+        assert q.head(SLOClass.STANDARD).req_id == wide.req_id
+
+    def test_remove(self):
+        q = AdmissionQueue()
+        r = elastic_request(npb_dt_like(8))
+        q.push(r, 0.0)
+        assert q.remove(r.req_id) is r
+        assert q.remove(r.req_id) is None
+        assert q.depth == 0
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+class TestMetrics:
+    def test_histogram_percentiles(self):
+        h = LatencyHistogram()
+        vals = np.linspace(0.01, 1.0, 100)
+        for v in vals:
+            h.observe(float(v))
+        assert h.p50 == pytest.approx(float(np.percentile(vals, 50)))
+        assert h.p99 <= h.max == pytest.approx(1.0)
+        assert len(h) == 100
+        with pytest.raises(ValueError):
+            h.observe(-1.0)
+
+    def test_empty_histogram(self):
+        h = LatencyHistogram()
+        assert h.p50 == -1.0 and h.p99 == -1.0 and h.mean == -1.0
+        assert h.to_dict()["n"] == 0
+
+
+# ---------------------------------------------------------------------------
+# service behavior
+# ---------------------------------------------------------------------------
+
+class TestService:
+    def test_place_and_complete(self):
+        svc = small_service()
+        req = elastic_request(npb_dt_like(8), hold_time=2.0)
+        res = svc.run([req])
+        reply = res.replies[req.req_id]
+        assert reply.status == "completed"
+        assert reply.admission_latency == pytest.approx(0.25)
+        assert len(reply.nodes) == 8
+        assert res.metrics.placed == 1 and res.metrics.completed == 1
+
+    def test_service_deadline_shed(self):
+        svc = small_service()
+        # deadline tighter than the drain interval: queued, then shed
+        req = elastic_request(npb_dt_like(8), deadline=0.1, hold_time=1.0)
+        res = svc.run([req])
+        assert res.replies[req.req_id].status == "shed"
+        assert res.metrics.shed == 1 and res.metrics.placed == 0
+
+    def test_preemption_under_pressure(self):
+        svc = small_service()   # 27 nodes
+        fillers = [elastic_request(halo3d((2, 2, 2)),
+                                   slo=SLOClass.BEST_EFFORT,
+                                   submit_time=0.0, hold_time=100.0)
+                   for _ in range(3)]           # 24 of 27 nodes held
+        urgent = replica_request(shard_bytes=1e8, n_replicas=2,
+                                 shards_per_replica=3,
+                                 slo=SLOClass.INTERACTIVE,
+                                 submit_time=1.0, hold_time=1.0)
+        res = svc.run(fillers + [urgent], horizon=10.0)
+        assert res.replies[urgent.req_id].status == "completed"
+        assert res.metrics.preempted >= 1
+        preempted = [r for r in res.replies.values() if r.preemptions]
+        assert preempted and all(r.slo == SLOClass.BEST_EFFORT
+                                 for r in preempted)
+        # the victim went back to its lane rather than dying
+        assert res.metrics.requeued >= 1
+
+    def test_standard_does_not_preempt(self):
+        svc = small_service()
+        fillers = [elastic_request(halo3d((2, 2, 2)),
+                                   slo=SLOClass.BEST_EFFORT,
+                                   submit_time=0.0, hold_time=5.0)
+                   for _ in range(3)]
+        std = elastic_request(npb_dt_like(8), slo=SLOClass.STANDARD,
+                              submit_time=1.0, hold_time=1.0)
+        res = svc.run(fillers + [std])
+        assert res.metrics.preempted == 0
+        # it still completes — but only after a filler finishes
+        assert res.replies[std.req_id].status == "completed"
+        assert res.replies[std.req_id].admission_latency > 1.0
+
+    def test_resize_grow_and_shrink(self):
+        svc = small_service(dims=(4, 4, 4))
+        req = replica_request(shard_bytes=1e8, n_replicas=2,
+                              shards_per_replica=3, hold_time=50.0)
+        svc.submit(req, now=0.0)
+        svc.tick(0.25)
+        lease = svc.leases[req.req_id]
+        orig = lease.nodes.copy()
+        assert len(orig) == 8
+        grown = svc.resize(req.req_id, 3, now=1.0)
+        assert len(grown.nodes) == 12
+        # existing replicas stay put; the new block lands on free nodes
+        assert np.array_equal(grown.nodes[:8], orig)
+        assert not np.isin(grown.nodes[8:], orig).any()
+        assert grown.workload.n_ranks == 12
+        shrunk = svc.resize(req.req_id, 1, now=2.0)
+        assert np.array_equal(shrunk.nodes, orig[:4])
+        assert svc.metrics.resized == 2
+        # freed nodes are allocatable again
+        assert svc.free_capacity() == 64 - 4
+        with pytest.raises(ValueError):
+            svc.resize(req.req_id, 0, now=3.0)
+        with pytest.raises(KeyError):
+            svc.resize(999999, 2, now=3.0)
+
+    def test_failure_replacement_parity_with_engine(self):
+        # one shared request: req_id seeds the per-request placement, so
+        # both services see identical inputs
+        req = elastic_request(npb_dt_like(8), hold_time=100.0)
+
+        def setup():
+            svc = small_service(seed=3, dims=(4, 4, 4))
+            svc.submit(req, now=0.0)
+            svc.tick(0.25)
+            return svc
+        a_svc = setup()
+        b_svc = setup()
+        assert np.array_equal(a_svc.leases[req.req_id].nodes,
+                              b_svc.leases[req.req_id].nodes)
+        victim = [int(a_svc.leases[req.req_id].nodes[0])]
+        # A: the service's failure path
+        touched = a_svc.handle_failure(victim, now=1.0)
+        assert touched == [req.req_id]
+        # B: the same call made directly against the engine
+        b_svc.state = b_svc.state.with_health(victim, NodeHealth.DOWN)
+        lease = b_svc.leases[req.req_id]
+        plan = b_svc.engine.replace(
+            lease.plan, victim,
+            state=b_svc.busy_view(exclude=req.req_id), rng=b_svc.rng)
+        assert plan.provenance == "replace-incremental"
+        assert np.array_equal(a_svc.leases[req.req_id].nodes,
+                              plan.placement)
+        assert a_svc.metrics.replaced == 1
+        assert a_svc.replies[req.req_id].replacements == 1
+
+    def test_failure_requeues_when_no_capacity(self):
+        svc = small_service()   # 27 nodes
+        req = elastic_request(halo3d((3, 3, 3)), hold_time=100.0)  # all 27
+        svc.submit(req, now=0.0)
+        svc.tick(0.25)
+        svc.handle_failure([0], now=1.0)
+        # 26 survivors cannot hold 27 ranks: back to the queue
+        assert req.req_id not in svc.leases
+        assert svc.replies[req.req_id].status == "queued"
+        assert svc.metrics.requeued == 1
+
+    def test_failure_untouched_lease_fast_path(self):
+        svc = small_service(dims=(4, 4, 4))
+        req = elastic_request(npb_dt_like(8), hold_time=100.0)
+        svc.submit(req, now=0.0)
+        svc.tick(0.25)
+        used = set(int(x) for x in svc.leases[req.req_id].nodes)
+        spare = next(i for i in range(64) if i not in used)
+        touched = svc.handle_failure([spare], now=1.0)
+        assert touched == []
+        assert svc.metrics.replace_skipped == 1
+        assert svc.metrics.replaced == 0
+
+    def test_recovery_restores_capacity(self):
+        svc = small_service()
+        svc.handle_failure([0, 1], now=0.0)
+        assert svc.free_capacity() == 25
+        svc.handle_recover([0, 1], now=1.0)
+        assert svc.free_capacity() == 27
+
+    def test_determinism_same_seed_same_log(self):
+        # the SAME request objects through two fresh services: equal
+        # seeds and inputs must give bit-identical placement logs
+        rng = np.random.default_rng(11)
+        reqs, t = [], 0.0
+        for i in range(30):
+            t += float(rng.exponential(0.2))
+            reqs.append(elastic_request(npb_dt_like(8),
+                                        slo=SLOClass(i % 3),
+                                        submit_time=t, hold_time=1.0))
+        belief = np.where(np.arange(64) % 7 == 0, 0.2, 0.0)
+
+        def storm():
+            svc = small_service(seed=5, dims=(4, 4, 4))
+            res = svc.run(reqs, failures=[(2.0, [5]), (4.0, [9])],
+                          heartbeat_interval=0.5, belief=belief,
+                          belief_jitter=0.2)
+            assert res.metrics.completed == 30
+            return res.placement_log
+        assert storm() == storm()
+
+    def test_busy_view_keeps_route_key_warm(self):
+        svc = small_service(dims=(4, 4, 4))
+        base_key = svc.state.key
+        for _ in range(3):
+            svc.submit(elastic_request(npb_dt_like(8), hold_time=50.0),
+                       now=0.0)
+        svc.tick(0.25)
+        view = svc.busy_view()
+        assert view.is_overlay and view.route_key == base_key
+        # belief jitter within atol never mints an epoch
+        svc.heartbeat(np.zeros(64), now=0.5)
+        assert svc.state.key == base_key
+
+    def test_storm_cache_hit_rate(self):
+        # miniature of the benchmarks/serve_storm.py gate
+        svc = small_service(seed=0, dims=(4, 4, 4))
+        rng = np.random.default_rng(1)
+        reqs, t = [], 0.0
+        for _ in range(120):
+            t += float(rng.exponential(0.2))
+            reqs.append(elastic_request(npb_dt_like(8), submit_time=t,
+                                        hold_time=1.0))
+        belief = np.zeros(64)
+        belief[[3, 9, 17]] = 0.3
+        res = svc.run(reqs, failures=[(6.0, [3]), (14.0, [9])],
+                      recoveries=[(20.0, [3, 9])],
+                      heartbeat_interval=0.5, belief=belief,
+                      belief_jitter=0.3)
+        assert res.metrics.completed == 120
+        assert res.hit_rate >= 0.90
+
+    def test_invalid_drain_interval(self):
+        with pytest.raises(ValueError):
+            PlacementService(TorusTopology((3, 3, 3)), drain_interval=0.0)
+
+
+# ---------------------------------------------------------------------------
+# satellite: arrival validation + duration cap
+# ---------------------------------------------------------------------------
+
+class TestArrivalValidation:
+    def test_poisson_rejects_bad_inputs(self):
+        f = mixed_size_factory((8,))
+        rng = np.random.default_rng(0)
+        for bad in (0.0, -1.0, math.inf, math.nan):
+            with pytest.raises(ValueError, match="rate"):
+                poisson_stream(f, bad, 5, rng)
+        with pytest.raises(ValueError, match="n_jobs"):
+            poisson_stream(f, 1.0, 0, rng)
+        with pytest.raises(ValueError, match="max_duration"):
+            poisson_stream(f, 1.0, 5, rng, max_duration=0.0)
+
+    def test_poisson_duration_cap(self):
+        f = mixed_size_factory((8,))
+        specs = poisson_stream(f, rate=10.0, n_jobs=500,
+                               rng=np.random.default_rng(0),
+                               max_duration=5.0)
+        assert 0 < len(specs) < 500
+        assert all(s.submit_time <= 5.0 for s in specs)
+        # same seed without the cap: identical prefix
+        full = poisson_stream(f, rate=10.0, n_jobs=500,
+                              rng=np.random.default_rng(0))
+        assert [s.submit_time for s in specs] == \
+            [s.submit_time for s in full[:len(specs)]]
+
+    def test_empty_stream_errors(self):
+        with pytest.raises(ValueError, match="at least one"):
+            serial_stream([])
+        with pytest.raises(ValueError, match="at least one"):
+            burst_stream([])
+        with pytest.raises(ValueError, match="instant"):
+            burst_stream([npb_dt_like(4)], at=-1.0)
+        with pytest.raises(ValueError, match="at least one size"):
+            mixed_size_factory(())
+        with pytest.raises(ValueError, match="weights"):
+            mixed_size_factory((4, 8), weights=(1.0,))
+
+
+# ---------------------------------------------------------------------------
+# satellite: scheduler admission counters
+# ---------------------------------------------------------------------------
+
+class TestSchedulerStats:
+    def test_admission_counters(self):
+        topo = TorusTopology((2, 2, 2))     # 8 nodes
+        sch = Scheduler(topo, seed=0)
+        sch.clock = 0.0
+        first = sch.submit(Job(npb_dt_like(8)))   # takes the whole machine
+        assert first.state == "running" and first.start_time == 0.0
+        sch.clock = 1.0
+        second = sch.submit(Job(npb_dt_like(4)))  # must wait
+        s = sch.stats()
+        assert s["queue_depth"] == 1 and s["peak_queue_depth"] == 1
+        assert s["n_enqueued"] == 2 and s["n_started"] == 1
+        sch.clock = 3.0
+        sch.complete(first.job.job_id)
+        s = sch.stats()
+        assert second.state == "running"
+        assert second.enqueue_time == 1.0 and second.start_time == 3.0
+        assert s["queue_depth"] == 0 and s["n_started"] == 2
+        assert s["admission_wait_max_s"] == pytest.approx(2.0)
+        assert s["admission_wait_mean_s"] == pytest.approx(1.0)
+
+    def test_clustersim_drives_clock(self):
+        from repro.sim.clustersim import ClusterSim, SimConfig
+        from repro.workloads.arrivals import JobSpec
+        topo = TorusTopology((3, 3, 3))
+        sch = Scheduler(topo, seed=0)
+        jobs = [JobSpec(npb_dt_like(8), submit_time=float(i))
+                for i in range(4)]
+        ClusterSim(sch, jobs, config=SimConfig()).run()
+        s = sch.stats()
+        assert s["n_enqueued"] == 4 and s["n_started"] == 4
+        assert s["admission_wait_total_s"] >= 0.0
+        assert sch.clock > 0.0
