@@ -123,7 +123,17 @@ class JaxBackend:
         The host array is kept referenced so ``id()`` cannot be recycled
         while the cache entry lives.  Transfers happen inside
         :meth:`scope` so float64 matrices stay float64.
+
+        A :class:`~repro.core.lazydist.LazyDistance` must never land
+        here — densifying it on device would defeat the O(n)-memory
+        contract.  The jax mapping layer ships its ``implicit`` coords
+        instead (``mapping_jax._device_distances``); anything else is a
+        dispatch bug, surfaced eagerly.
         """
+        if hasattr(arr, "implicit"):
+            raise TypeError(
+                "refusing to densify a LazyDistance onto device; use its "
+                ".implicit coordinate spec (see mapping_jax._device_distances)")
         import jax
         key = (id(arr), self.dtype)
         hit = self._device.get(key)

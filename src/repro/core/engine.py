@@ -30,6 +30,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import os
 import time
 from collections import OrderedDict
 from typing import (Any, Iterable, Optional, Protocol, Sequence, Union,
@@ -281,28 +282,63 @@ class PlacementEngine:
 
     def __init__(self, default_policy: str = "tofa",
                  max_cached_weights: int = 16,
-                 backend: Optional[str] = None):
+                 backend: Optional[str] = None,
+                 lazy_threshold: Optional[int] = None,
+                 max_cached_topologies: int = 32):
         """``backend`` pins this engine's placements to an array backend
         (``"numpy"`` | ``"jax"``, see :mod:`repro.core.backend`): every
         ``place``/``place_many``/``replace`` call runs inside
         ``backend.use(...)``.  ``None`` (default) follows the process-wide
-        active backend, so existing call sites are unaffected."""
+        active backend, so existing call sites are unaffected.
+
+        ``lazy_threshold``: topologies with more nodes than this serve
+        hop/weight metrics as O(N)-memory
+        :class:`~repro.core.lazydist.LazyDistance` adapters instead of
+        dense (N, N) matrices (policies go through the multilevel /
+        hierarchical path).  ``None`` reads ``REPRO_LAZY_THRESHOLD``
+        (default 4096); pass ``0`` to force lazy everywhere or a huge
+        value to force dense.
+
+        ``max_cached_topologies`` bounds the per-topology caches (hop
+        metrics, coordinates, delta-refresh bases) with LRU eviction —
+        long-lived service processes under topology churn stop growing
+        without bound; evictions are counted in :meth:`stats`."""
         self.default_policy = default_policy
         self.backend = backend
-        self._hops: dict[Any, np.ndarray] = {}
-        self._coords: dict[Any, np.ndarray] = {}
+        if lazy_threshold is None:
+            lazy_threshold = int(os.environ.get("REPRO_LAZY_THRESHOLD",
+                                                "4096"))
+        self.lazy_threshold = lazy_threshold
+        self._hops: OrderedDict[Any, np.ndarray] = OrderedDict()
+        self._coords: OrderedDict[Any, np.ndarray] = OrderedDict()
         self._weights: OrderedDict[Any, np.ndarray] = OrderedDict()
         self._shared: OrderedDict[Any, dict] = OrderedDict()
         # per-topology record of the last derived weight matrix and the
         # health it answers — the base for row-wise delta refreshes
-        self._weights_last: dict[Any, tuple] = {}
-        self._pinned: dict[int, Topology] = {}
+        self._weights_last: OrderedDict[Any, tuple] = OrderedDict()
+        self._pinned: OrderedDict[int, Topology] = OrderedDict()
         self._max_weights = max_cached_weights
+        self._max_topos = max_cached_topologies
         self.stats = {"hop_hits": 0, "hop_misses": 0,
                       "weight_hits": 0, "weight_misses": 0,
                       "shared_hits": 0, "shared_misses": 0,
                       "weight_delta_updates": 0,
-                      "replace_skips": 0}
+                      "replace_skips": 0,
+                      "topology_evictions": 0,
+                      "weight_evictions": 0,
+                      "shared_evictions": 0}
+
+    def _lru_touch(self, cache: OrderedDict, key, build, cap: int,
+                   evict_stat: str):
+        """Fetch-or-build with LRU recency + bounded eviction."""
+        if key in cache:
+            cache.move_to_end(key)
+            return cache[key]
+        out = cache[key] = build()
+        while len(cache) > cap:
+            cache.popitem(last=False)
+            self.stats[evict_stat] += 1
+        return out
 
     # ------------------------------------------------------------ caching
     def _topo_key(self, topo: Topology):
@@ -311,22 +347,31 @@ class PlacementEngine:
             return topo       # dict resolves hash collisions via __eq__
         except TypeError:     # unhashable adapter: identity, pinned alive
             self._pinned[id(topo)] = topo
+            while len(self._pinned) > self._max_topos:
+                self._pinned.popitem(last=False)
             return ("id", id(topo))
 
-    def hops(self, topo: Topology) -> np.ndarray:
+    def _use_lazy(self, topo: Topology) -> bool:
+        """Whether this topology's metrics are served implicitly (O(N)
+        adapters) instead of as dense (N, N) matrices."""
+        return (topo.n_nodes > self.lazy_threshold
+                and hasattr(topo, "lazy_distance"))
+
+    def hops(self, topo: Topology):
         key = self._topo_key(topo)
-        if key not in self._hops:
-            self.stats["hop_misses"] += 1
-            self._hops[key] = topo.hop_matrix()
-        else:
+        if key in self._hops:
             self.stats["hop_hits"] += 1
-        return self._hops[key]
+        else:
+            self.stats["hop_misses"] += 1
+        build = (topo.lazy_distance if self._use_lazy(topo)
+                 else topo.hop_matrix)
+        return self._lru_touch(self._hops, key, build, self._max_topos,
+                               "topology_evictions")
 
     def coords(self, topo: Topology) -> np.ndarray:
         key = self._topo_key(topo)
-        if key not in self._coords:
-            self._coords[key] = topo.coords_array()
-        return self._coords[key]
+        return self._lru_touch(self._coords, key, topo.coords_array,
+                               self._max_topos, "topology_evictions")
 
     def weights(self, topo: Topology, p_f: Optional[np.ndarray] = None,
                 straggler: Optional[np.ndarray] = None) -> np.ndarray:
@@ -369,6 +414,7 @@ class PlacementEngine:
         self._weights[key] = w
         while len(self._weights) > self._max_weights:
             self._weights.popitem(last=False)
+            self.stats["weight_evictions"] += 1
         return w
 
     def _derive_weights(self, topo: Topology,
@@ -379,6 +425,12 @@ class PlacementEngine:
         is small.  Delta results are bit-identical to full derivation
         (only entries whose routes touch a changed node can differ, and
         exactly those are recomputed with the same formula)."""
+        if self._use_lazy(topo):
+            # implicit regime: the adapter IS the weight matrix — O(N)
+            # per (topology, state) entry, no delta machinery needed
+            # (entries are computed per access, so there is no stored
+            # base to refresh)
+            return topo.lazy_distance(p_f, straggler=straggler)
         n = topo.n_nodes
         flags = (np.zeros(n, dtype=bool) if p_f is None
                  else np.asarray(p_f) > 0)
@@ -406,6 +458,10 @@ class PlacementEngine:
         if W is None:
             W = topo.weight_matrix(p_f, straggler=straggler)
         self._weights_last[topo_key] = (flags, slow, W)
+        self._weights_last.move_to_end(topo_key)
+        while len(self._weights_last) > self._max_topos:
+            self._weights_last.popitem(last=False)
+            self.stats["topology_evictions"] += 1
         return W
 
     def shared_cache(self, topo: Topology,
@@ -442,6 +498,7 @@ class PlacementEngine:
         self._shared[key] = d
         while len(self._shared) > self._max_weights:
             self._shared.popitem(last=False)
+            self.stats["shared_evictions"] += 1
         return d
 
     def cache_stats(self) -> dict:

@@ -67,7 +67,14 @@ class FatTreeTopology:
 
     # --------------------------------------------------------------- distances
     def hop_matrix(self) -> np.ndarray:
-        """(n, n) switch-level hop distances (0 / 2 / 4 / 6)."""
+        """(n, n) switch-level hop distances (0 / 2 / 4 / 6).
+
+        Memoised on first use so topology construction stays O(1) and
+        repeat callers share one dense matrix.
+        """
+        cached = self.__dict__.get("_hop_matrix")
+        if cached is not None:
+            return cached
         c = self.coords_array()
         same_pod = c[:, None, 0] == c[None, :, 0]
         same_edge = same_pod & (c[:, None, 1] == c[None, :, 1])
@@ -76,7 +83,22 @@ class FatTreeTopology:
         hops[same_pod] = 4.0
         hops[same_edge] = 2.0
         hops[same_host] = 0.0
+        object.__setattr__(self, "_hop_matrix", hops)
         return hops
+
+    def lazy_distance(self, p_f: np.ndarray | None = None, c: float = 1.0,
+                      straggler: np.ndarray | None = None):
+        """O(n)-memory implicit view of :meth:`weight_matrix` — exact for
+        any health state (endpoint-form weighting)."""
+        from .lazydist import FatTreeLazyDistance
+        return FatTreeLazyDistance(self, p_f, c=c, straggler=straggler)
+
+    def hierarchy_groups(self, target_groups: int = 64) -> np.ndarray:
+        """(n,) group ids for hierarchical mapping: one group per edge
+        switch (the natural "rack" of a fat-tree — hosts under one edge
+        are mutually 2 hops)."""
+        c = self.coords_array()
+        return (c[:, 0] * self.edges_per_pod + c[:, 1]).astype(np.int64)
 
     def weight_matrix(
         self,

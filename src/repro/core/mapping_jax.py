@@ -100,6 +100,42 @@ def guest_supported(G_w: np.ndarray) -> bool:
         G_w, lambda: bool(np.array_equal(G_w, G_w.T)))
 
 
+def lazy_supported(D) -> bool:
+    """A lazy distance adapter is served by this module only when it
+    exposes an implicit spec (healthy uniform torus) — distances are then
+    computed in-kernel from the (N, ndim) coordinate table
+    (:mod:`repro.kernels.hop_dist`), never gathered from a stored matrix.
+    Fault-weighted lazy adapters run the NumPy kernels instead."""
+    return getattr(D, "implicit", None) is not None
+
+
+def _dist_fns(Ds, dims, scale):
+    """The two distance accessors of the refine/score loops, closed over
+    either a dense (N, N) matrix (``dims is None``) or an (N, ndim)
+    coordinate table with static torus ``dims`` (implicit mode)."""
+    if dims is None:
+        def dist_pairs(a, b):
+            return Ds[a, b]
+
+        def dist_row(node, p):
+            return Ds[node][p]
+    else:
+        from repro.kernels.hop_dist.ops import torus_hop_pairs
+        from repro.kernels.hop_dist.ref import torus_hop_elems_ref
+
+        def dist_pairs(a, b):
+            # broadcast-elementwise; the all-pairs M0 build in
+            # _refine_one routes through torus_hop_pairs below instead
+            return scale * torus_hop_elems_ref(Ds[a], Ds[b], dims)
+
+        def dist_row(node, p):
+            return scale * torus_hop_elems_ref(Ds[node], Ds[p], dims)
+
+        dist_pairs.all_pairs = lambda u, v: (
+            scale * torus_hop_pairs(Ds[u], Ds[v], dims))
+    return dist_pairs, dist_row
+
+
 def _sparse_rows(G_w: np.ndarray) -> tuple[np.ndarray, np.ndarray, int]:
     """CSR-padded rows of the (diag-zeroed) guest: (idx, val, k_pad).
 
@@ -158,20 +194,29 @@ def _pad_placements(placements: np.ndarray) -> tuple[np.ndarray, int, int]:
 # --------------------------------------------------------------------------
 
 def _refine_one(p0, idx, val, G_dense, Ds, n_valid, *, movers: int,
-                total_passes: int, dense: bool):
+                total_passes: int, dense: bool, dims=None,
+                scale: float = 1.0):
     """Refine ONE placement; decision-identical to the NumPy loop.
 
     ``p0`` (n,) int32 node ids (tail >= n_valid is masked padding),
     ``idx``/``val`` (n, k) CSR-padded guest rows, ``G_dense`` (n, n) or
     a (1, 1) placeholder when the sparse path runs, ``Ds`` (N, N)
-    symmetrised device-resident distances, ``n_valid`` traced scalar.
+    symmetrised device-resident distances — or, with static ``dims``
+    set (implicit mode), the (N, ndim) coordinate table from which
+    every distance below is computed in-kernel, ``n_valid`` traced
+    scalar.
     """
     n = p0.shape[0]
     rows = jnp.arange(n, dtype=jnp.int32)
     valid = rows < n_valid
     fdt = Ds.dtype
+    dist_pairs, dist_row = _dist_fns(Ds, dims, scale)
 
-    M0 = Ds[p0[:, None], p0[None, :]]                       # (n, n) gather
+    if dims is None:
+        M0 = dist_pairs(p0[:, None], p0[None, :])           # (n, n) gather
+    else:
+        # all-pairs block build — the Pallas torus_hop kernel on TPU
+        M0 = dist_pairs.all_pairs(p0, p0).astype(fdt)
     contrib0 = (val.astype(fdt)
                 * jnp.take_along_axis(M0, idx, axis=1)).sum(-1)
 
@@ -217,15 +262,15 @@ def _refine_one(p0, idx, val, G_dense, Ds, n_valid, *, movers: int,
         # instead of read out of M — M stays *write-only* in this
         # section, which is what lets XLA update it in place rather than
         # copying the matrix once per mover
-        row_i = Ds[oj][p]                        # gathered_row(p[i])
-        row_j = Ds[oi][p]
+        row_i = dist_row(oj, p)                  # gathered_row(p[i])
+        row_j = dist_row(oi, p)
         M = (M.at[i, :].set(row_i).at[:, i].set(row_i)
               .at[j, :].set(row_j).at[:, j].set(row_j))
         M = M.at[jnp.stack([i, j]), jnp.stack([j, i])].set(
             jnp.stack([row_i[j], row_i[j]]))
         if dense:
-            old_row_i = Ds[oi][p_old]
-            old_row_j = Ds[oj][p_old]
+            old_row_i = dist_row(oi, p_old)
+            old_row_j = dist_row(oj, p_old)
             c1 = contrib + (G_dense[i] * (row_i - old_row_i)
                             + G_dense[j] * (row_j - old_row_j))
             c1 = c1.at[i].set((G_dense[i] * row_i).sum())
@@ -235,8 +280,8 @@ def _refine_one(p0, idx, val, G_dense, Ds, n_valid, *, movers: int,
             ij_, vj = sparse_col(j)
             # the sparse delta only needs the old rows at the k nonzero
             # columns — gather those few entries instead of full rows
-            old_i_k = Ds[oi][p_old[ii]]
-            old_j_k = Ds[oj][p_old[ij_]]
+            old_i_k = dist_row(oi, p_old[ii])
+            old_j_k = dist_row(oj, p_old[ij_])
             # delta built separately then added, matching the NumPy
             # fused-expression summation order bit for bit
             delta = jnp.zeros(n, fdt).at[ii].add(vi * (row_i[ii]
@@ -270,11 +315,22 @@ def _refine_one(p0, idx, val, G_dense, Ds, n_valid, *, movers: int,
 
 
 @functools.lru_cache(maxsize=32)
-def _refine_jit(movers: int, total_passes: int, dense: bool):
+def _refine_jit(movers: int, total_passes: int, dense: bool,
+                dims=None, scale: float = 1.0):
     fn = functools.partial(_refine_one, movers=movers,
-                           total_passes=total_passes, dense=dense)
+                           total_passes=total_passes, dense=dense,
+                           dims=dims, scale=scale)
     batched = jax.vmap(fn, in_axes=(0, None, None, None, None, None))
     return jax.jit(batched)
+
+
+def _device_distances(D, be):
+    """((device array, dims, scale)) — the dense symmetrised matrix, or
+    the coordinate table + static spec in implicit mode."""
+    spec = getattr(D, "implicit", None)
+    if spec is None:
+        return be.device_matrix(_sym_host(D)), None, 1.0
+    return be.device_matrix(spec.coords), spec.dims, float(spec.scale)
 
 
 def refine_many(G_w: np.ndarray, D: np.ndarray, placements: np.ndarray,
@@ -285,9 +341,10 @@ def refine_many(G_w: np.ndarray, D: np.ndarray, placements: np.ndarray,
     P, n, n_pad = _pad_placements(np.atleast_2d(placements))
     with be.scope():
         idx, val, G_dense, dense = _guest_device(G_w, n_pad, be)
-        Ds = be.device_matrix(_sym_host(D))
+        Ds, dims, scale = _device_distances(D, be)
         movers_eff = min(movers, n_pad)
-        run = _refine_jit(movers_eff, max_passes + extra_passes, dense)
+        run = _refine_jit(movers_eff, max_passes + extra_passes, dense,
+                          dims, scale)
         out = run(jnp.asarray(P), idx, val, G_dense, Ds, jnp.int32(n))
     out = np.asarray(out)[:, :n].astype(np.int64)
     return out if np.asarray(placements).ndim == 2 else out[0]
@@ -334,13 +391,15 @@ def pairwise_refine(G_w: np.ndarray, D: np.ndarray, placement: np.ndarray,
 # --------------------------------------------------------------------------
 
 @functools.lru_cache(maxsize=8)
-def _hop_bytes_jit():
+def _hop_bytes_jit(dims=None, scale: float = 1.0):
     def score(P, idx, val, Ds, n_valid):
+        dist_pairs, _ = _dist_fns(Ds, dims, scale)
+
         def one(p):
             tgt = p[idx]                       # (n, k) partner node ids
-            d = Ds[p[:, None], tgt]            # gathered distances
+            d = dist_pairs(p[:, None], tgt)    # gathered / in-kernel
             ok = jnp.arange(p.shape[0])[:, None] < n_valid
-            return 0.5 * jnp.where(ok, val * d, 0.0).sum()
+            return 0.5 * jnp.where(ok, val * d.astype(val.dtype), 0.0).sum()
         return jax.vmap(one)(P)
     return jax.jit(score)
 
@@ -353,8 +412,9 @@ def hop_bytes_batch(G_w: np.ndarray, D: np.ndarray,
     P, n, n_pad = _pad_placements(P2)
     with be.scope():
         idx, val, _Gd, _dense = _guest_device(G_w, n_pad, be)
-        Ds = be.device_matrix(_sym_host(D))
-        out = _hop_bytes_jit()(jnp.asarray(P), idx, val, Ds, jnp.int32(n))
+        Ds, dims, scale = _device_distances(D, be)
+        out = _hop_bytes_jit(dims, scale)(
+            jnp.asarray(P), idx, val, Ds, jnp.int32(n))
     return np.asarray(out, dtype=np.float64)
 
 

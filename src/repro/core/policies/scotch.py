@@ -20,7 +20,9 @@ class ScotchPolicy:
     def place(self, ctx: PolicyContext) -> PolicyOutput:
         n, avail = ctx.n_procs, ctx.available
         subsets = [avail[:n]]
-        if n < len(avail):
+        if n < len(avail) and not mapping.is_lazy(ctx.hops):
+            # the restricted-matrix ball needs a dense metric; above the
+            # lazy threshold the sequential window candidate stands alone
             Wa = ctx.hops[np.ix_(avail, avail)]
             subsets.append(avail[mapping.select_nodes(Wa, n)])
         placement = mapping.best_map(ctx.G_w, subsets, ctx.coords, ctx.hops, ctx.rng)

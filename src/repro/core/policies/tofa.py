@@ -13,12 +13,19 @@ restriction.  When no consecutive fault-free window exists, the guest is
 mapped onto a compact subset grown under the Eq. 1-weighted metric, which is
 how the 100x penalty steers placement away from failing nodes while
 tolerating them if unavoidable (the trade-off discussed in Section 3).
+
+Two registrations share this module: flat ``tofa`` (the paper listing,
+full-graph DRB) and ``tofa-ml`` (the same candidate search with the
+multilevel coarsen->map->refine mapper of :mod:`repro.core.multilevel`).
+Above the engine's lazy-distance threshold both run the multilevel /
+hierarchical path — the flat mapper's full-matrix operations are
+undefined on a :class:`~repro.core.lazydist.LazyDistance` metric.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from .. import mapping
+from .. import mapping, multilevel
 from ..topology import find_consecutive_healthy
 from .base import PolicyContext, PolicyOutput, register_policy
 
@@ -56,6 +63,12 @@ class TofaPolicy:
         coords = ctx.coords
         rng = ctx.rng
         W = ctx.weights                       # Eq. 1 weights on H (cached)
+
+        if mapping.is_lazy(W):
+            # above the lazy threshold the flat candidate search (full-
+            # matrix select_nodes / np.ix_ restrictions) cannot run —
+            # the multilevel policy's hierarchical path serves "tofa"
+            return TofaMultilevelPolicy._place_lazy(ctx, W)
 
         # Candidate node-set generation depends only on (health, n) — never
         # on the guest traffic — so it is memoised in the engine's
@@ -122,3 +135,103 @@ class TofaPolicy:
         else:
             nodes = mapping.select_nodes(W, n)
         return False, [nodes]
+
+
+@register_policy("tofa-ml")
+class TofaMultilevelPolicy(TofaPolicy):
+    """TOFA candidate search + multilevel coarsen->map->refine mapper.
+
+    Below ``COARSE_TARGET`` processes, coarsening is a no-op and the
+    policy delegates to flat :class:`TofaPolicy` outright — placements
+    are bit-identical (the parity anchor of ``tests/test_multilevel.py``).
+    With a lazy metric (engine above its size threshold) the candidate
+    search itself goes hierarchical: the consecutive-healthy window scan
+    is O(N), and the fallback ball is grown rack-first over
+    ``Topology.hierarchy_groups`` representatives
+    (:func:`repro.core.multilevel.hierarchical_select`).
+    """
+
+    fault_aware = True
+    COARSE_TARGET = 160
+
+    def place(self, ctx: PolicyContext) -> PolicyOutput:
+        n = ctx.n_procs
+        W = ctx.weights
+        if mapping.is_lazy(W):
+            return self._place_lazy(ctx, W)
+        if n <= self.COARSE_TARGET:
+            # coarsening would be a no-op: run the flat policy unchanged
+            return TofaPolicy.place(self, ctx)
+        used_window, candidates = ctx.memo(
+            ("tofa-candidates", n), lambda: self._candidates(ctx, W))
+        placements = np.stack([
+            multilevel.multilevel_map(ctx.G_w, nodes, ctx.coords, D=W,
+                                      rng=ctx.rng,
+                                      coarse_target=self.COARSE_TARGET)
+            for nodes in candidates])
+        scores = mapping.hop_bytes_batch(ctx.G_w, W, placements)
+        return PolicyOutput(placements[int(np.argmin(scores))],
+                            used_consecutive_window=used_window)
+
+    @classmethod
+    def _place_lazy(cls, ctx: PolicyContext, W) -> PolicyOutput:
+        n = ctx.n_procs
+        used_window, candidates = ctx.memo(
+            ("tofa-ml-candidates", n), lambda: cls._candidates_lazy(ctx))
+        placements = np.stack([
+            multilevel.multilevel_map(ctx.G_w, nodes, ctx.coords, D=W,
+                                      rng=ctx.rng,
+                                      coarse_target=cls.COARSE_TARGET)
+            for nodes in candidates])
+        scores = mapping.hop_bytes_batch(ctx.G_w, W, placements)
+        return PolicyOutput(placements[int(np.argmin(scores))],
+                            used_consecutive_window=used_window)
+
+    @staticmethod
+    def _candidates_lazy(ctx: PolicyContext) -> tuple[bool, list[np.ndarray]]:
+        """O(N)-memory candidate node sets: the first consecutive-healthy
+        window plus a hierarchical (rack-first) compact ball."""
+        n = ctx.n_procs
+        p_f = ctx.p_f
+        W = ctx.weights
+        N = W.shape[0]
+        S = find_consecutive_healthy(p_f, n)
+        candidates: list[np.ndarray] = []
+        if S is not None:
+            candidates.append(S)
+            # further healthy windows — the scan is O(N), and window
+            # diversity is what closes the quality gap to the dense
+            # candidate search under sparse faults
+            for s0 in _healthy_window_starts(p_f, n)[1:4]:
+                candidates.append(np.arange(s0, s0 + n))
+        topo = getattr(ctx.request, "topology", None)
+        if hasattr(topo, "hierarchy_groups"):
+            groups = topo.hierarchy_groups(max(64, N // 256))
+            healthy = p_f == 0
+            hmask = healthy if healthy.sum() >= n else None
+            ball = multilevel.hierarchical_select(W, groups, n, healthy=hmask)
+            if len(ball) >= n:
+                candidates.append(ball)
+            faulty = np.flatnonzero(p_f > 0)
+            if faulty.size and hmask is not None:
+                # a second ball grown from the rack farthest from any
+                # fault — the lazy analogue of the dense path's
+                # far-seeded select_nodes candidates.  Rep-to-fault
+                # distances touch #groups x #faults entries only.
+                ng = int(groups.max()) + 1
+                first = np.full(ng, -1, dtype=np.int64)
+                hid = np.flatnonzero(healthy)
+                first[groups[hid[::-1]]] = hid[::-1]
+                live = np.flatnonzero(first >= 0)
+                reps = first[live]
+                dist_to_fault = np.asarray(
+                    W[reps[:, None], faulty[None, :]], np.float64).min(axis=1)
+                far_group = int(live[np.argmax(dist_to_fault)])
+                ball2 = multilevel.hierarchical_select(
+                    W, groups, n, healthy=hmask, seed_group=far_group)
+                if len(ball2) >= n:
+                    candidates.append(ball2)
+        if not candidates:
+            # last resort: lazy-aware frontier growth (blocked seed scan)
+            candidates.append(mapping.select_nodes(W, n))
+        return S is not None, candidates

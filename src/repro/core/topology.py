@@ -111,11 +111,56 @@ class TorusTopology:
 
     # --------------------------------------------------------------- distances
     def hop_matrix(self) -> np.ndarray:
-        """(n, n) hop distances (sum over dims of shortest wrap distance)."""
+        """(n, n) hop distances (sum over dims of shortest wrap distance).
+
+        Memoised on first use: constructing a topology stays O(1), and
+        repeat callers (engine cache misses across health states, scenario
+        presets) share one dense matrix instead of recomputing the
+        O(n^2 * ndim) derivation per call.
+        """
+        cached = self.__dict__.get("_hop_matrix")
+        if cached is not None:
+            return cached
         c = self.coords_array()  # (n, ndim)
         diff = np.abs(c[:, None, :] - c[None, :, :])  # (n, n, ndim)
         wrap = np.array(self.dims)[None, None, :] - diff
-        return np.minimum(diff, wrap).sum(axis=-1).astype(np.float64)
+        out = np.minimum(diff, wrap).sum(axis=-1).astype(np.float64)
+        # frozen dataclass: bypass __setattr__ for the memo slot
+        object.__setattr__(self, "_hop_matrix", out)
+        return out
+
+    def lazy_distance(self, p_f: np.ndarray | None = None, c: float = 1.0,
+                      straggler: np.ndarray | None = None):
+        """O(n)-memory implicit view of :meth:`weight_matrix` — entries
+        are computed from coordinates on indexing, bit-identical to the
+        dense matrix (see :mod:`repro.core.lazydist`)."""
+        from .lazydist import TorusLazyDistance
+        return TorusLazyDistance(self, p_f, c=c, straggler=straggler)
+
+    def hierarchy_groups(self, target_groups: int = 64) -> np.ndarray:
+        """(n,) contiguous-block group ids for hierarchical mapping.
+
+        Splits the torus into >= ``target_groups`` axis-aligned bricks by
+        repeatedly halving the dimension with the longest remaining
+        segment — groups are compact sub-tori ("racks"), so the coarse
+        mapper can treat group centroids as super-nodes.
+        """
+        segs = [1] * self.ndim
+        n_groups = 1
+        while n_groups < min(target_groups, self.n_nodes):
+            k = max(range(self.ndim), key=lambda i: self.dims[i] / segs[i])
+            if segs[k] >= self.dims[k]:
+                break
+            segs[k] *= 2
+            n_groups = 1
+            for s, d in zip(segs, self.dims):
+                n_groups *= min(s, d)
+        coords = self.coords_array()
+        gid = np.zeros(self.n_nodes, dtype=np.int64)
+        for i in range(self.ndim):
+            s = min(segs[i], self.dims[i])
+            gid = gid * s + (coords[:, i] * s) // self.dims[i]
+        return gid
 
     def weight_matrix(
         self,

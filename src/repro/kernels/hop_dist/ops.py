@@ -1,0 +1,89 @@
+"""torus_hop — implicit wraparound hop distance, computed from coordinates.
+
+The implicit-distance contract of the mapping pipeline: instead of
+gathering ``D[u, v]`` from a stored O(N^2) matrix, compute
+
+    hop(u, v) = sum_d min(|cu_d - cv_d|, dim_d - |cu_d - cv_d|)
+
+directly from the (N, ndim) coordinate table — O(N) memory for any
+topology size.  Three implementations share this module's dispatch:
+
+* :func:`torus_hop_np` / :func:`torus_hop_pairs_np` — pure NumPy, no jax
+  import at module scope, so :class:`repro.core.lazydist.LazyDistance`
+  works on NumPy-only installs.
+* :mod:`.ref` — jitted ``jnp`` reference (CPU/GPU, and the differential
+  oracle for the kernel).
+* :mod:`.kernel` — Pallas TPU kernel tiling the coordinate table through
+  VMEM row blocks.
+
+``impl="auto"`` runs the Pallas kernel on TPU and the jitted reference
+everywhere else — the same fallback contract as
+:mod:`repro.kernels.swap_gain`.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+
+# ------------------------------------------------------------- numpy fallback
+
+def torus_hop_np(cu, cv, dims) -> np.ndarray:
+    """Elementwise hop distance; broadcastable ``(..., ndim)`` coords in,
+    float64 ``(...)`` out.  Pure NumPy — never imports jax."""
+    cu = np.asarray(cu, dtype=np.int64)
+    cv = np.asarray(cv, dtype=np.int64)
+    out = None
+    for k, d in enumerate(dims):
+        diff = np.abs(cu[..., k] - cv[..., k])
+        h = np.minimum(diff, d - diff)
+        out = h if out is None else out + h
+    return np.asarray(out, dtype=np.float64)
+
+
+def torus_hop_pairs_np(cu, cv, dims) -> np.ndarray:
+    """All-pairs form: (m, ndim), (k, ndim) -> (m, k) float64."""
+    cu = np.asarray(cu)
+    cv = np.asarray(cv)
+    return torus_hop_np(cu[:, None, :], cv[None, :, :], dims)
+
+
+# --------------------------------------------------------------- jax dispatch
+
+def _resolve(impl: str) -> str:
+    if impl == "auto":
+        import jax
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+    return impl
+
+
+def torus_hop_pairs(cu, cv, dims, impl: str = "auto"):
+    """Traceable all-pairs hop distance: (m, ndim), (k, ndim) -> (m, k).
+
+    Safe to call inside other jitted code (the jitted refine loop of
+    :mod:`repro.core.mapping_jax` builds its gathered-distance matrix
+    through here).
+    """
+    impl = _resolve(impl)
+    if impl in ("pallas", "pallas_interpret"):
+        from repro.kernels.hop_dist.kernel import torus_hop_tpu
+        return torus_hop_tpu(cu, cv, dims,
+                             interpret=(impl == "pallas_interpret"))
+    from repro.kernels.hop_dist.ref import torus_hop_pairs_ref
+    return torus_hop_pairs_ref(cu, cv, dims)
+
+
+@functools.lru_cache(maxsize=64)
+def _jitted(dims: tuple, impl: str):
+    import jax
+
+    def f(cu, cv):
+        return torus_hop_pairs(cu, cv, dims, impl=impl)
+    return jax.jit(f)
+
+
+def torus_hop(cu, cv, dims, *, impl: str = "auto"):
+    """Jitted public entry: (m, ndim), (k, ndim) device/host arrays ->
+    (m, k) hop distances on the active jax device."""
+    return _jitted(tuple(int(d) for d in dims), _resolve(impl))(cu, cv)

@@ -1,0 +1,27 @@
+"""Implicit torus hop distance — jitted-jnp reference.
+
+Differential oracle for the Pallas kernel and the off-TPU fallback of
+``impl="auto"`` dispatch in :mod:`repro.kernels.hop_dist.ops`.  The
+per-dimension loop is unrolled at trace time (``dims`` is static), so no
+(m, k, ndim) intermediate is ever materialised — peak memory is one
+(m, k) block.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def torus_hop_elems_ref(cu, cv, dims):
+    """Broadcast-elementwise hop distance: ``(..., ndim)`` coords in,
+    ``(...)`` out (same broadcasting contract as the NumPy fallback)."""
+    out = None
+    for k, d in enumerate(dims):
+        diff = jnp.abs(cu[..., k] - cv[..., k])
+        h = jnp.minimum(diff, d - diff)
+        out = h if out is None else out + h
+    return out
+
+
+def torus_hop_pairs_ref(cu, cv, dims):
+    """All-pairs form: (m, ndim), (k, ndim) -> (m, k)."""
+    return torus_hop_elems_ref(cu[:, None, :], cv[None, :, :], dims)

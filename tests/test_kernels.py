@@ -224,3 +224,63 @@ def test_swap_gain_ops_dispatch():
     np.testing.assert_allclose(np.asarray(out),
                                np.asarray(swap_gain_ref(M, G, contrib, 7)),
                                rtol=1e-12)
+
+
+# ------------------------------------------------------------- hop_dist
+@pytest.mark.parametrize("dims,m,k", [
+    ((8, 8, 8), 37, 53),       # ragged (padding exercised)
+    ((32, 32, 16), 256, 128),  # block-aligned
+    ((5, 7), 12, 12),          # 2-D, non-pow2 extents
+    ((2, 3, 4, 3), 9, 30),     # 4-D
+])
+def test_torus_hop_kernel_matches_np(dims, m, k):
+    from repro.kernels.hop_dist.kernel import torus_hop_tpu
+    from repro.kernels.hop_dist.ops import torus_hop_pairs, torus_hop_pairs_np
+    from repro.kernels.hop_dist.ref import torus_hop_pairs_ref
+
+    rng = np.random.default_rng(0)
+    cu = np.stack([rng.integers(0, d, m) for d in dims], axis=1)
+    cv = np.stack([rng.integers(0, d, k) for d in dims], axis=1)
+    want = torus_hop_pairs_np(cu, cv, dims)  # numpy all-pairs oracle
+    got_ref = np.asarray(torus_hop_pairs_ref(jnp.asarray(cu),
+                                             jnp.asarray(cv), dims))
+    got_tpu = np.asarray(torus_hop_tpu(jnp.asarray(cu), jnp.asarray(cv),
+                                       dims, interpret=True))
+    got_auto = np.asarray(torus_hop_pairs(cu, cv, dims))
+    np.testing.assert_array_equal(got_ref, want)
+    np.testing.assert_array_equal(got_tpu, want)
+    np.testing.assert_array_equal(got_auto, want)
+
+
+def test_torus_hop_elems_matches_dense_hop_matrix():
+    from repro.core.topology import TorusTopology
+    from repro.kernels.hop_dist.ops import torus_hop_np
+    from repro.kernels.hop_dist.ref import torus_hop_elems_ref
+
+    topo = TorusTopology((6, 5, 4))
+    c = topo.coords_array()
+    H = topo.hop_matrix()
+    u, v = np.meshgrid(np.arange(120), np.arange(120), indexing="ij")
+    np.testing.assert_array_equal(
+        torus_hop_np(c[u.ravel()], c[v.ravel()],
+                     topo.dims).reshape(120, 120), H)
+    got = np.asarray(torus_hop_elems_ref(
+        jnp.asarray(c[u.ravel()]), jnp.asarray(c[v.ravel()]), topo.dims))
+    np.testing.assert_array_equal(got.reshape(120, 120), H)
+
+
+@given(st.integers(2, 16), st.integers(2, 16), st.integers(2, 16),
+       st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_torus_hop_property(dx, dy, dz, seed):
+    from repro.kernels.hop_dist.ops import torus_hop_np
+
+    dims = (dx, dy, dz)
+    rng = np.random.default_rng(seed)
+    cu = np.stack([rng.integers(0, d, 8) for d in dims], axis=1)
+    cv = np.stack([rng.integers(0, d, 8) for d in dims], axis=1)
+    h = torus_hop_np(cu, cv, dims)
+    assert (h >= 0).all()
+    assert (h <= sum(d // 2 for d in dims)).all()             # diameter
+    np.testing.assert_array_equal(h, torus_hop_np(cv, cu, dims))  # symmetry
+    assert (torus_hop_np(cu, cu, dims) == 0).all()            # identity

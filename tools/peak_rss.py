@@ -1,0 +1,28 @@
+"""Peak-RSS measurement helper (stdlib-only, no psutil).
+
+``resource.getrusage(RUSAGE_SELF).ru_maxrss`` is the process's high-water
+resident set — a monotonic counter, so a meaningful per-measurement value
+requires a fresh process.  Benchmarks that want peak-RSS per row therefore
+run each row in a subprocess (see ``benchmarks/mapping_scale.py
+--implicit-case``) and read this helper at child exit.
+"""
+from __future__ import annotations
+
+import resource
+import sys
+
+
+def peak_rss_bytes() -> int:
+    """Peak resident set size of the current process, in bytes.
+
+    Linux reports ``ru_maxrss`` in KiB, macOS in bytes (the only two
+    platforms the benchmarks target).
+    """
+    ru = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    if sys.platform == "darwin":
+        return int(ru)
+    return int(ru * 1024)
+
+
+if __name__ == "__main__":
+    print(peak_rss_bytes())
