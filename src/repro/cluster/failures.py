@@ -249,6 +249,137 @@ class CorrelatedOutages(FailureProcess):
 
 
 @dataclasses.dataclass
+class CascadingOutages(FailureProcess):
+    """Cascading rack failures: an outage spreads to adjacent racks.
+
+    Seed outages follow the :class:`CorrelatedOutages` renewal per group
+    (up-time ~ Exp(``mtbf``) from the previous repair, outage duration ~
+    Exp(``mttr``)), but every outage — seed or induced — additionally
+    *cascades*: each adjacent group (neighbours in ``groups`` list order,
+    the shared-aisle/PDU adjacency of contiguous racks) fails with
+    probability ``spread_p`` after an Exp(``spread_delay``) lag.  Induced
+    outages repair after Exp(``mttr``) and can cascade onward; within one
+    cascade tree each group fails at most once, so trees terminate.
+
+    ``seed_groups`` restricts *spontaneous* outages to the given group
+    indices (default: all groups seed) — the others only ever fail by
+    contagion, which is the stress case for a fault-aware scheduler whose
+    belief covers the flaky racks but not their healthy-looking
+    neighbours.
+    """
+
+    groups: Sequence[Sequence[int]]
+    mtbf: float
+    mttr: float
+    spread_p: float = 0.5
+    spread_delay: float = 0.1
+    seed_groups: Optional[Sequence[int]] = None
+
+    def __post_init__(self):
+        if not (0.0 <= self.spread_p <= 1.0):
+            raise ValueError(f"spread_p must be in [0, 1], got {self.spread_p}")
+        if self.spread_delay <= 0 or self.mttr <= 0 or self.mtbf <= 0:
+            raise ValueError("mtbf, mttr and spread_delay must be > 0")
+
+    def generate(self, rng, horizon) -> list[NodeEvent]:
+        nodes = [tuple(int(x) for x in np.asarray(g, dtype=np.int64))
+                 for g in self.groups]
+        n_groups = len(nodes)
+        seeds = (range(n_groups) if self.seed_groups is None
+                 else [int(s) for s in self.seed_groups])
+        out: list[NodeEvent] = []
+
+        def emit(gi: int, t: float) -> float:
+            """One outage of group ``gi`` at ``t``; returns repair time."""
+            out.append(NodeEvent(t, "fail", nodes[gi]))
+            dt = float(rng.exponential(self.mttr))
+            if t + dt < horizon:
+                out.append(NodeEvent(t + dt, "repair", nodes[gi]))
+            return t + dt
+
+        def cascade(gi: int, t: float, visited: set[int]) -> None:
+            """Spread from an outage of ``gi`` at ``t`` to its neighbours
+            (FIFO over the adjacency, deterministic draw order)."""
+            frontier = [(gi, t)]
+            while frontier:
+                g0, t0 = frontier.pop(0)
+                for nb in (g0 - 1, g0 + 1):
+                    if nb < 0 or nb >= n_groups or nb in visited:
+                        continue
+                    if rng.random() >= self.spread_p:
+                        continue
+                    visited.add(nb)
+                    t1 = t0 + float(rng.exponential(self.spread_delay))
+                    if t1 >= horizon:
+                        continue
+                    emit(nb, t1)
+                    frontier.append((nb, t1))
+
+        # deterministic draw order: group-major over seeds, then each seed
+        # outage's full cascade tree before the next outage of that seed
+        for gi in seeds:
+            t = float(rng.exponential(self.mtbf))
+            while t < horizon:
+                repaired = emit(gi, t)
+                cascade(gi, t, {gi})
+                t = repaired + float(rng.exponential(self.mtbf))
+        return sorted(out, key=lambda e: e.time)
+
+    def expected_p_f(self, n_nodes) -> np.ndarray:
+        """Steady-state unavailability, one-hop cascade approximation:
+        a group's outage rate is its own seed rate plus ``spread_p`` times
+        each neighbouring seed's rate (deeper contagion terms dropped)."""
+        n_groups = len(self.groups)
+        seeds = (set(range(n_groups)) if self.seed_groups is None
+                 else set(int(s) for s in self.seed_groups))
+        lam_seed = 1.0 / self.mtbf
+        p = np.zeros(n_nodes)
+        for gi, grp in enumerate(self.groups):
+            lam = lam_seed if gi in seeds else 0.0
+            lam += self.spread_p * lam_seed * sum(
+                1 for nb in (gi - 1, gi + 1)
+                if 0 <= nb < n_groups and nb in seeds)
+            frac = (lam * self.mttr) / (1.0 + lam * self.mttr)
+            p[np.asarray(grp, dtype=np.int64)] = frac
+        return p
+
+
+@dataclasses.dataclass
+class MaintenanceWindow(FailureProcess):
+    """A scheduled maintenance drain: ``nodes`` leave service at ``start``
+    and return at ``start + duration`` — one deterministic fail/repair
+    pair (no RNG draw), so the window composes with stochastic processes
+    without perturbing their draw order.  Jobs running on the nodes at
+    ``start`` are aborted, exactly like a real drain deadline expiring.
+    """
+
+    nodes: Sequence[int]
+    start: float
+    duration: float
+
+    def __post_init__(self):
+        if self.start < 0 or self.duration <= 0:
+            raise ValueError(
+                f"need start >= 0 and duration > 0, got ({self.start}, "
+                f"{self.duration})")
+
+    def generate(self, rng, horizon) -> list[NodeEvent]:
+        nodes = tuple(int(x) for x in np.asarray(self.nodes, dtype=np.int64))
+        out: list[NodeEvent] = []
+        if self.start < horizon:
+            out.append(NodeEvent(self.start, "fail", nodes))
+            end = self.start + self.duration
+            if end < horizon:
+                out.append(NodeEvent(end, "repair", nodes))
+        return out
+
+    def expected_p_f(self, n_nodes) -> np.ndarray:
+        # a planned window is not a hazard the estimator should bake into
+        # p_f; lifecycle (DRAINED/DOWN) carries it instead
+        return np.zeros(n_nodes)
+
+
+@dataclasses.dataclass
 class CompositeProcess(FailureProcess):
     """Superposition of several processes (e.g. per-node Weibull churn +
     rack-level correlated outages) merged into one sorted trace."""

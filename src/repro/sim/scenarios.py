@@ -28,11 +28,13 @@ from typing import Callable, Optional, Sequence
 
 import numpy as np
 
-from repro.cluster.failures import (BernoulliPerJob, CompositeProcess,
-                                    CorrelatedOutages, ExponentialLifetimes,
+from repro.cluster.failures import (BernoulliPerJob, CascadingOutages,
+                                    CompositeProcess, CorrelatedOutages,
+                                    ExponentialLifetimes, MaintenanceWindow,
                                     contiguous_racks)
 from repro.cluster.nodes import NodeState
 from repro.cluster.scheduler import Scheduler
+from repro.core.dragonfly import DragonflyTopology
 from repro.core.engine import PlacementEngine, PlacementRequest
 from repro.core.fattree import FatTreeTopology
 from repro.core.state import ClusterState
@@ -368,6 +370,138 @@ def drain_sweep(policies: Sequence[str] = ("linear", "tofa"), seed: int = 0,
     return {"name": "drain-sweep",
             "params": {"dims": dims, "n_flaky": n_flaky, "n_jobs": n_jobs,
                        "thresholds": list(thresholds), "seed": seed},
+            "policies": rows}
+
+
+@register_preset(
+    "dragonfly",
+    "The saturated mix on a dragonfly (groups of all-to-all routers joined "
+    "by global links) — the high-radix host family: exercises the Topology "
+    "protocol + HopNetwork on a 3-level hierarchy with gateway detours.")
+def dragonfly(policies: Sequence[str] = ("linear", "tofa"),
+              seed: int = 0, fast: bool = False) -> dict:
+    topo = (DragonflyTopology(p=2, a=4, h=2)          # 9 groups, 72 hosts
+            if fast else
+            DragonflyTopology(p=4, a=8, h=4, g=9))    # 9 groups, 288 hosts
+    net = network_for(topo)
+    engine = PlacementEngine()
+    n_jobs = 8 if fast else 24
+    rng0 = np.random.default_rng(seed * 613 + 11)
+    candidates = rng0.choice(topo.n_nodes,
+                             max(4, topo.n_nodes // 4), replace=False)
+    factory = mixed_size_factory(sizes=(4, 6) if fast else (8, 16, 32))
+    wls = [factory(np.random.default_rng(seed * 67 + i))
+           for i in range(n_jobs)]
+    rows = {}
+    for pol in policies:
+        sch, fm = _flaky_cluster(topo, net, engine, seed, candidates, 0.3)
+        sim = ClusterSim(
+            sch, burst_stream(wls, policy=pol), attempt_failures=fm,
+            config=SimConfig(heartbeat_interval=0.5),
+            rng=np.random.default_rng(seed * 947 + 17))
+        rows[pol] = _row(sim.run())
+    return {"name": "dragonfly",
+            "params": {"p": topo.p, "a": topo.a, "h": topo.h, "g": topo.g,
+                       "n_hosts": topo.n_nodes, "n_jobs": n_jobs,
+                       "seed": seed},
+            "policies": rows}
+
+
+@register_preset(
+    "cascading-racks",
+    "Cascading rack failures: outages on two flaky racks spread to "
+    "adjacent racks by contagion — the scheduler's belief covers the "
+    "seeds, but the healthy-looking neighbours fail too.  Checkpointed "
+    "restarts + engine.replace under correlated, spreading faults.")
+def cascading_racks(policies: Sequence[str] = ("linear", "tofa"),
+                    seed: int = 0, fast: bool = False) -> dict:
+    dims = (4, 4, 4) if fast else (6, 6, 6)   # see correlated-failures
+    topo = TorusTopology(dims)
+    net = network_for(topo)
+    engine = PlacementEngine()
+    rack_size = 16 if fast else 27
+    racks = contiguous_racks(topo.n_nodes, rack_size)
+    seed_racks = (0, 1)                       # spontaneous-outage racks
+    proc = CascadingOutages(racks, mtbf=2.0 if fast else 6.0, mttr=0.4,
+                            spread_p=0.5, spread_delay=0.05,
+                            seed_groups=seed_racks)
+    n_jobs = 8 if fast else 16
+    factory = mixed_size_factory(sizes=(8, 12) if fast else (16, 27))
+    wls = [factory(np.random.default_rng(seed * 151 + i))
+           for i in range(n_jobs)]
+    truth = proc.expected_p_f(topo.n_nodes)
+    rows = {}
+    for pol in policies:
+        sch = Scheduler(topo, net=net, engine=engine, seed=seed,
+                        drain_threshold=0.6)
+        _converged_monitor(sch, truth, seed)
+        sim = ClusterSim(
+            sch, burst_stream(wls, policy=pol, at=1.0),
+            failure_process=proc,
+            config=SimConfig(heartbeat_interval=0.25,
+                             checkpoint_interval=0.05,
+                             checkpoint_overhead=0.002,
+                             restart_delay=0.01,
+                             failure_horizon=500.0),
+            rng=np.random.default_rng(seed * 1327 + 19))
+        rows[pol] = _row(sim.run())
+    return {"name": "cascading-racks",
+            "params": {"dims": dims, "rack_size": rack_size,
+                       "seed_racks": list(seed_racks), "n_jobs": n_jobs,
+                       "seed": seed},
+            "policies": rows}
+
+
+@register_preset(
+    "maintenance-burst",
+    "A maintenance window takes a whole rack out of service just before "
+    "an adversarial burst of wide jobs lands on the shrunken cluster; "
+    "flaky nodes elsewhere keep dying.  Fault-aware placement must thread "
+    "tight capacity around the elevated-p_f nodes until the rack returns.")
+def maintenance_burst(policies: Sequence[str] = ("linear", "tofa"),
+                      seed: int = 0, fast: bool = False) -> dict:
+    dims = (4, 4, 4) if fast else (6, 6, 6)
+    topo = TorusTopology(dims)
+    net = network_for(topo)
+    engine = PlacementEngine()
+    rack_size = 16 if fast else 36
+    racks = contiguous_racks(topo.n_nodes, rack_size)
+    maintenance = racks[-1]
+    n_flaky = 10 if fast else 32
+    rng0 = np.random.default_rng(seed * 733 + 29)
+    pool = np.setdiff1d(np.arange(topo.n_nodes), maintenance)
+    flaky = rng0.choice(pool, n_flaky, replace=False)
+    # adversarial burst: wide jobs only, sized against the shrunken
+    # capacity, all at t=1.0 — inside the maintenance window
+    n_jobs = 8 if fast else 14
+    factory = mixed_size_factory(sizes=(12, 16) if fast else (27, 64))
+    wls = [factory(np.random.default_rng(seed * 173 + i))
+           for i in range(n_jobs)]
+    proc = CompositeProcess([
+        MaintenanceWindow(maintenance, start=0.5, duration=4.0),
+        ExponentialLifetimes(flaky, mtbf=0.8 if fast else 2.5, mttr=0.5),
+    ])
+    truth = np.zeros(topo.n_nodes)
+    truth[flaky] = 0.3
+    rows = {}
+    for pol in policies:
+        sch = Scheduler(topo, net=net, engine=engine, seed=seed,
+                        drain_threshold=0.6)
+        _converged_monitor(sch, truth, seed)
+        sim = ClusterSim(
+            sch, burst_stream(wls, policy=pol, at=1.0),
+            failure_process=proc,
+            config=SimConfig(heartbeat_interval=0.1,
+                             checkpoint_interval=0.05,
+                             checkpoint_overhead=0.002,
+                             restart_delay=0.01,
+                             failure_horizon=500.0),
+            rng=np.random.default_rng(seed * 2539 + 41))
+        rows[pol] = _row(sim.run())
+    return {"name": "maintenance-burst",
+            "params": {"dims": dims, "rack_size": rack_size,
+                       "n_flaky": n_flaky, "n_jobs": n_jobs,
+                       "window": [0.5, 4.5], "seed": seed},
             "policies": rows}
 
 

@@ -1,0 +1,242 @@
+"""Network model semantics + the dragonfly topology contract.
+
+``TorusNetwork`` is *route form* (a failed node kills any flow routed
+through it, like SimGrid's zero-capacity links); ``HopNetwork`` is
+*endpoint form* (multi-path fabrics detour around interior failures, so
+only a failed endpoint aborts).  Both distinctions are gate-relevant:
+the simulators' doom decisions and the vectorized paper path depend on
+them.  The dragonfly tests pin the ``Topology``-protocol contract the
+placement engine assumes: symmetric hop matrix, zero diagonal, the
+{2,3,4,5} dragonfly distance spectrum, partition-valid
+``hierarchy_groups``, and endpoint-form Eq. (1) weights.
+"""
+import numpy as np
+import pytest
+
+from repro.core.comm_graph import CommGraph
+from repro.core.dragonfly import DragonflyTopology
+from repro.core.engine import PlacementEngine, PlacementRequest
+from repro.core.state import ClusterState
+from repro.core.topology import FAULT_PENALTY, TorusTopology
+from repro.sim.network import GBPS, HopNetwork, TorusNetwork, network_for
+
+
+def _pair_graph(nbytes=8e6, nmsgs=10.0):
+    g = CommGraph(2)
+    g.add_p2p(0, 1, nbytes, nmsgs)
+    return g
+
+
+# ----------------------------------------------------------- TorusNetwork
+def test_torus_touches_failed_route_form():
+    net = TorusNetwork(TorusTopology((4, 4, 4)))
+    comm = _pair_graph()
+    # ranks on nodes 0=(0,0,0) and 2=(0,0,2): dimension-ordered route
+    # passes through node 1
+    placement = np.array([0, 2])
+    assert net.touches_failed(comm, placement, np.array([1]))   # interior
+    assert net.touches_failed(comm, placement, np.array([2]))   # endpoint
+    assert not net.touches_failed(comm, placement, np.array([5]))
+    assert not net.touches_failed(comm, placement, np.array([], dtype=int))
+
+
+def test_torus_link_loads_split_both_directions():
+    net = TorusNetwork(TorusTopology((4, 4, 4)))
+    b = 4e6
+    comm = _pair_graph(nbytes=b)
+    loads = net.link_loads(comm, np.array([0, 1]))       # adjacent nodes
+    assert loads[(0, 1)] == pytest.approx(b / 2)
+    assert loads[(1, 0)] == pytest.approx(b / 2)
+    assert sum(loads.values()) == pytest.approx(b)
+    # two hops away: each direction crosses two links
+    loads2 = net.link_loads(comm, np.array([0, 2]))
+    assert sum(loads2.values()) == pytest.approx(2 * b)
+
+
+def test_torus_comm_time_bottleneck_plus_latency():
+    topo = TorusTopology((4, 4, 4))
+    net = TorusNetwork(topo)
+    b, m = 8e6, 10.0
+    comm = _pair_graph(nbytes=b, nmsgs=m)
+    t = net.comm_time(comm, np.array([0, 2]))
+    expected = (b / 2) / net.link_bandwidth + m * 2 * net.link_latency
+    assert t == pytest.approx(expected)
+    assert net.compute_time(6e9, 2.0) == pytest.approx(2.0)
+
+
+# ------------------------------------------------------------- HopNetwork
+def test_hop_network_endpoint_fault_form():
+    topo = DragonflyTopology(p=2, a=2, h=1, g=3)
+    net = HopNetwork(topo)
+    comm = _pair_graph()
+    placement = np.array([0, topo.n_nodes - 1])
+    assert net.touches_failed(comm, placement, np.array([0]))
+    # interior nodes never abort a HopNetwork job (multi-path detours)
+    interior = np.array([n for n in range(1, topo.n_nodes - 1)])
+    assert not net.touches_failed(comm, placement, interior)
+    assert not net.touches_failed(comm, placement, np.array([], dtype=int))
+
+
+def test_hop_network_byte_hops_formula():
+    topo = DragonflyTopology(p=2, a=2, h=1, g=3)
+    net = HopNetwork(topo)
+    b, m = 6e6, 4.0
+    comm = _pair_graph(nbytes=b, nmsgs=m)
+    p = np.array([0, 1])                                 # same router
+    D = topo.hop_matrix()
+    hops = D[0, 1]
+    t = net.comm_time(comm, p)
+    byte_hops = b * hops                                 # one symmetric pair
+    expected = byte_hops / (net.link_bandwidth * comm.n) \
+        + m * hops * net.link_latency
+    assert t == pytest.approx(expected)
+
+
+def test_hop_network_memoises_hop_matrix():
+    net = HopNetwork(DragonflyTopology(p=2, a=2, h=1, g=3))
+    assert net.hop_matrix() is net.hop_matrix()
+
+
+def test_network_for_dispatch():
+    assert isinstance(network_for(TorusTopology((2, 2, 2))), TorusNetwork)
+    assert isinstance(network_for(DragonflyTopology(p=2, a=2, h=1, g=3)),
+                      HopNetwork)
+    assert GBPS == pytest.approx(1e9 / 8.0)
+
+
+# ----------------------------------------------------- dragonfly contract
+def test_dragonfly_shape_and_defaults():
+    d = DragonflyTopology(p=2, a=4, h=2)
+    assert d.g == 4 * 2 + 1                              # balanced default
+    assert d.hosts_per_group == 8
+    assert d.n_nodes == 9 * 8
+    assert d.coords(0) == (0, 0, 0)
+    assert d.coords(d.n_nodes - 1) == (8, 3, 1)
+    c = d.coords_array()
+    assert c.shape == (d.n_nodes, 3)
+    # id-ordering: consecutive ids co-located (group-major, router-major)
+    assert list(c[:, 0]) == sorted(c[:, 0])
+
+
+def test_dragonfly_invalid_configs():
+    with pytest.raises(ValueError):
+        DragonflyTopology(p=0, a=4, h=2)
+    with pytest.raises(ValueError):
+        DragonflyTopology(p=2, a=2, h=1, g=1)            # < 2 groups
+    with pytest.raises(ValueError):
+        DragonflyTopology(p=2, a=2, h=1, g=5)            # g-1 > a*h slots
+
+
+def test_dragonfly_hop_matrix_contract():
+    d = DragonflyTopology(p=2, a=4, h=2, g=5)
+    D = d.hop_matrix()
+    assert D.shape == (d.n_nodes, d.n_nodes)
+    assert np.array_equal(D, D.T)                        # symmetric
+    assert np.all(np.diag(D) == 0)
+    off = D[~np.eye(d.n_nodes, dtype=bool)]
+    assert set(np.unique(off)) <= {2.0, 3.0, 4.0, 5.0}
+    # same router -> 2, same group different router -> 3
+    assert D[0, 1] == 2.0                                # hosts of router 0
+    assert D[0, d.p] == 3.0                              # routers 0 and 1
+    # inter-group distance >= 3 everywhere
+    grp = d.coords_array()[:, 0]
+    assert (D[grp[:, None] != grp[None, :]] >= 3.0).all()
+    assert d.hop_matrix() is D                           # memoised
+
+
+def test_dragonfly_gateway_consistency():
+    d = DragonflyTopology(p=2, a=4, h=2, g=9)
+    for src in range(d.g):
+        owned = {}
+        for dst in range(d.g):
+            if dst == src:
+                with pytest.raises(ValueError):
+                    d.gateway_router(src, dst)
+                continue
+            r = d.gateway_router(src, dst)
+            assert 0 <= r < d.a
+            owned.setdefault(r, []).append(dst)
+        # consecutive slot assignment: every router gateways <= h groups
+        assert all(len(v) <= d.h for v in owned.values())
+        assert sum(len(v) for v in owned.values()) == d.g - 1
+
+
+def test_dragonfly_gateway_explains_hops():
+    d = DragonflyTopology(p=2, a=2, h=2, g=4)
+    D = d.hop_matrix()
+    c = d.coords_array()
+    for u in range(d.n_nodes):
+        for v in range(d.n_nodes):
+            gu, ru = c[u, 0], c[u, 1]
+            gv, rv = c[v, 0], c[v, 1]
+            if gu == gv:
+                continue
+            detours = (int(ru != d.gateway_router(gu, gv))
+                       + int(rv != d.gateway_router(gv, gu)))
+            assert D[u, v] == 3.0 + detours
+
+
+def test_dragonfly_hierarchy_groups_partition():
+    d = DragonflyTopology(p=2, a=4, h=2, g=9)
+    grp = d.hierarchy_groups(target_groups=4)            # coarse: per group
+    assert grp.shape == (d.n_nodes,)
+    ids, counts = np.unique(grp, return_counts=True)
+    assert len(ids) == d.g
+    assert (counts == d.hosts_per_group).all()           # equal partition
+    fine = d.hierarchy_groups(target_groups=64)          # finer than g
+    ids2, counts2 = np.unique(fine, return_counts=True)
+    assert len(ids2) == d.g * d.a
+    assert (counts2 == d.p).all()
+    # refinement: equal fine ids imply equal coarse ids
+    for gid in ids2:
+        assert len(np.unique(grp[fine == gid])) == 1
+
+
+def test_dragonfly_weight_matrix_endpoint_penalty():
+    d = DragonflyTopology(p=2, a=2, h=1, g=3)
+    p_f = np.zeros(d.n_nodes)
+    k = 5
+    p_f[k] = 0.4
+    W0 = d.weight_matrix()
+    W = d.weight_matrix(p_f)
+    assert np.array_equal(W0, d.hop_matrix())            # no faults: hops
+    delta = W - W0
+    assert np.all(np.diag(delta) == 0)
+    mask = np.zeros_like(W, dtype=bool)
+    mask[k, :] = mask[:, k] = True
+    np.fill_diagonal(mask, False)
+    assert (delta[mask] == FAULT_PENALTY).all()
+    assert (delta[~mask] == 0).all()
+
+
+def test_dragonfly_weight_matrix_update_matches_full():
+    d = DragonflyTopology(p=2, a=2, h=1, g=3)
+    p_f0 = np.zeros(d.n_nodes)
+    p_f1 = p_f0.copy()
+    p_f1[[2, 7]] = 0.3
+    W_prev = d.weight_matrix(p_f0, c=2.0)
+    full = d.weight_matrix(p_f1, c=2.0)
+    inc = d.weight_matrix_update(W_prev, [2, 7], p_f=p_f1, c=2.0)
+    assert np.array_equal(inc, full)
+    assert d.weight_matrix_update(W_prev, [], p_f=p_f1) is W_prev
+
+
+def test_dragonfly_placement_engine_smoke():
+    d = DragonflyTopology(p=2, a=4, h=2)                 # 72 hosts
+    p_f = np.zeros(d.n_nodes)
+    faulty = [3, 11, 40]
+    p_f[faulty] = 0.5
+    state = ClusterState.from_arrays(d.n_nodes, p_f=p_f)
+    g = CommGraph(8)
+    for i in range(8):
+        g.add_p2p(i, (i + 1) % 8, 1e6, 4.0)
+    eng = PlacementEngine()
+    for policy in ("linear", "tofa"):
+        plan = eng.place(PlacementRequest(comm=g, topology=d, state=state),
+                         policy=policy,
+                         rng=np.random.default_rng(0))
+        p = np.asarray(plan.placement)
+        assert p.shape == (8,) and len(set(p.tolist())) == 8
+        assert (p >= 0).all() and (p < d.n_nodes).all()
+    # tofa avoids the flagged nodes
+    assert not set(p.tolist()) & set(faulty)

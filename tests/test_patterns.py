@@ -1,0 +1,104 @@
+"""Workload pattern construction: the paper's Fig. 1 traffic shapes.
+
+Pins the structural properties the placement policies and the replica
+engine rely on: symmetric volume matrices with zero diagonals, the
+banded halo structure of the regular (LAMMPS-style) generators, the
+off-diagonal shuffle of the irregular (NPB-DT-style) generator, and
+deterministic seeding so replica streams stay reproducible.
+"""
+import numpy as np
+import pytest
+
+from repro.workloads.patterns import (
+    WORKLOADS, Workload, _grid3, alltoall_heavy, allreduce_heavy,
+    get_workload, halo3d, lammps_like, npb_dt_like,
+)
+
+
+def _check_comm_invariants(wl: Workload):
+    G = wl.comm.G_v
+    assert G.shape == (wl.n_ranks, wl.n_ranks)
+    assert np.array_equal(G, G.T), "volume matrix must be symmetric"
+    assert np.all(np.diag(G) == 0), "no self-traffic on the diagonal"
+    assert G.sum() > 0
+    M = wl.comm.G_m
+    assert np.array_equal(M, M.T)
+    assert np.all(np.diag(M) == 0)
+
+
+def test_grid3_factors_cubically():
+    assert _grid3(64) == (4, 4, 4)
+    assert _grid3(27) == (3, 3, 3)
+    assert _grid3(24) == (2, 3, 4)
+    assert _grid3(7) == (1, 1, 7)                        # prime: degenerate
+    for n in (8, 12, 30, 64, 85):
+        a, b, c = _grid3(n)
+        assert a * b * c == n and a <= b <= c
+
+
+def test_lammps_halo_bands():
+    wl = lammps_like(64)
+    _check_comm_invariants(wl)
+    assert wl.pattern == "regular" and wl.name == "lammps"
+    G = wl.comm.G_v
+    # 4x4x4 rank grid: halo neighbours at rank strides nz=4... actually
+    # strides 1 (z), 4 (y), 16 (x); interior pair (21, 22) differs in z
+    assert G[21, 22] > 0 and G[21, 25] > 0 and G[21, 37] > 0
+    # halo traffic dominates: every rank talks to its 6 halo neighbours
+    halo = lammps_like(64, collective_bytes=0.0)
+    deg = (halo.comm.G_v > 0).sum(axis=1)
+    assert (deg == 6).all()
+
+
+def test_npb_dt_irregular_and_deterministic():
+    wl = npb_dt_like()
+    assert wl.n_ranks == 85                              # DT class C
+    _check_comm_invariants(wl)
+    assert wl.pattern == "irregular"
+    same = npb_dt_like()
+    assert np.array_equal(wl.comm.G_v, same.comm.G_v)    # seeded
+    other = npb_dt_like(seed=99)
+    assert not np.array_equal(wl.comm.G_v, other.comm.G_v)
+    # the DAG has no dense diagonal band: most adjacent-rank pairs silent
+    G = wl.comm.G_v
+    adj = np.array([G[i, i + 1] for i in range(84)])
+    assert (adj == 0).mean() > 0.5
+
+
+def test_halo3d_degree_six():
+    wl = halo3d((3, 3, 3))
+    _check_comm_invariants(wl)
+    deg = (wl.comm.G_v > 0).sum(axis=1)
+    assert (deg == 6).all()                              # periodic 3D stencil
+    wl2 = halo3d((2, 2, 2))                              # size-2 dims: wrap
+    _check_comm_invariants(wl2)                          # collapses to 3
+    assert ((wl2.comm.G_v > 0).sum(axis=1) == 3).all()
+
+
+def test_alltoall_uniform():
+    wl = alltoall_heavy(16)
+    _check_comm_invariants(wl)
+    G = wl.comm.G_v
+    off = G[~np.eye(16, dtype=bool)]
+    assert np.ptp(off) == 0 and off[0] > 0               # flat heatmap
+
+
+def test_allreduce_ring():
+    wl = allreduce_heavy(16)
+    _check_comm_invariants(wl)
+    deg = (wl.comm.G_v > 0).sum(axis=1)
+    assert (deg == 2).all()                              # ring neighbours
+
+
+def test_registry_round_trip():
+    assert set(WORKLOADS) == {"lammps", "npb_dt", "halo3d", "alltoall",
+                              "allreduce"}
+    for name in WORKLOADS:
+        wl = get_workload(name) if name != "halo3d" else get_workload(
+            name, dims=(2, 2, 2))
+        assert isinstance(wl, Workload)
+        assert wl.name == name
+        assert wl.flops_per_rank > 0 and wl.rounds > 0
+        _check_comm_invariants(wl)
+    with pytest.raises(KeyError):
+        get_workload("no-such-workload")
