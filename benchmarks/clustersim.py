@@ -217,7 +217,10 @@ def main() -> int:
     ap.add_argument("--alpha", type=float, default=0.05)
     ap.add_argument("--executor", default="auto",
                     choices=("auto", "serial", "process"))
-    ap.add_argument("--workers", type=int, default=None)
+    ap.add_argument("--workers", "--jobs", dest="workers", type=int,
+                    default=None,
+                    help="process-pool workers for the replica sweep; "
+                         "0 (or omitted) auto-detects os.cpu_count()")
     ap.add_argument("--skip-sweep", action="store_true",
                     help="skip the single-seed CSV sweep (replica-only run)")
     args = ap.parse_args()

@@ -14,16 +14,20 @@ placements are identical, so any wall-clock delta is pure backend cost.
 
 Implicit-distance scaling axis (PR 7)::
 
-    ... mapping_scale --implicit            # 16k- and 64k-node implicit-
-        torus placements, one subprocess per row so peak-RSS is per-case
+    ... mapping_scale --implicit            # 16k-, 64k- and 128k-node
+        implicit-torus placements, one subprocess per row so peak-RSS is
+        per-case; each row also times an incremental ``engine.replace``
+        after killing 4 used nodes (the lazy-exact re-placement path)
     ... mapping_scale --implicit --fast     # CI smoke: the 16k-node case
         must finish under a machine-normalised wall budget AND peak RSS
         must stay below the bytes a dense N x N hop matrix alone would
-        take (proof the lazy path never densifies)
+        take (proof the lazy path never densifies); the 128k-node leg
+        then runs under the same gates, but only when its predicted wall
+        fits IMPLICIT_128K_GUARD_S on this machine
     ... mapping_scale --scale --write       # append a trajectory point to
         benchmarks/BENCH_mapping.json: the refine_scale case matrix plus
         implicit rows carrying additive keys peak_rss_bytes / lazy /
-        backend / dense_matrix_bytes
+        backend / dense_matrix_bytes / replace_s / replace_provenance
 
 Each implicit row is measured in a subprocess (hidden ``--implicit-case``
 mode) because ``ru_maxrss`` is a process-lifetime high-water mark — see
@@ -129,6 +133,7 @@ def _cache_ablation(csv=print, dims=(8, 8, 4), n=85, n_faulty=12,
 IMPLICIT_CASES = [
     ("torus-32x32x16/n1024/implicit", (32, 32, 16), 1024, True),
     ("torus-64x32x32/n2048/implicit", (64, 32, 32), 2048, False),
+    ("torus-64x64x32/n2048/implicit", (64, 64, 32), 2048, False),
 ]
 # smoke wall-clock budget for the 16k-node case (seconds, on the reference
 # machine — scaled by the refine_scale calibration ratio at gate time).
@@ -136,6 +141,17 @@ IMPLICIT_CASES = [
 IMPLICIT_WALL_BUDGET_S = 30.0
 IMPLICIT_CALIBRATION_S = 0.009071  # refine_scale._calibrate() on the
 #                                    machine the budget above was measured on
+# optional second smoke leg: the 128k-node case runs only when its
+# machine-normalised *predicted* wall fits the guard — slow CI runners
+# skip the leg instead of timing out on it.
+IMPLICIT_128K_CASE = ("torus-64x64x32/n2048/implicit", (64, 64, 32), 2048)
+# measured on the reference machine: cold 25.1 s / warm 23.6 s / replace
+# 57.1 s (exact Eq. 1 route walks under the 4-failure overlay), 2.0 GB
+# peak RSS vs the 137 GB a dense matrix would take
+IMPLICIT_128K_EST_S = 110.0       # reference-machine child wall (all phases)
+IMPLICIT_128K_GUARD_S = 300.0     # run the leg only if est * scale fits this
+IMPLICIT_128K_WALL_BUDGET_S = 95.0    # gate on the measured warm placement
+N_REPLACE_FAILED = 4              # nodes killed by the replace micro-bench
 
 
 def _ring_comm(n: int, w: float = 8.0) -> np.ndarray:
@@ -164,6 +180,15 @@ def implicit_case_child(dims: tuple[int, ...], n: int,
         t0 = time.perf_counter()
         plan = engine.place(req, policy="tofa", rng=np.random.default_rng(0))
         warm_s = time.perf_counter() - t0
+        # fault-driven re-placement micro-bench: kill a handful of *used*
+        # nodes and time the incremental move (exercises the lazy-exact
+        # replace cost path — blocked row reductions, never a dense D)
+        failed = np.random.default_rng(5).choice(
+            np.asarray(plan.placement), size=N_REPLACE_FAILED, replace=False)
+        t0 = time.perf_counter()
+        plan_r = engine.replace(plan, failed_nodes=failed,
+                                rng=np.random.default_rng(0))
+        replace_s = time.perf_counter() - t0
     from repro.core.lazydist import is_lazy
     lazy = bool(is_lazy(engine.hops(topo)))
     name = f"torus-{'x'.join(map(str, dims))}/n{n}/implicit"
@@ -182,6 +207,8 @@ def implicit_case_child(dims: tuple[int, ...], n: int,
         "backend": backend,
         "peak_rss_bytes": peak_rss_bytes(),
         "dense_matrix_bytes": topo.n_nodes * topo.n_nodes * 8,
+        "replace_s": round(replace_s, 6),
+        "replace_provenance": plan_r.provenance,
     }
 
 
@@ -201,6 +228,7 @@ def _measure_implicit(dims: tuple[int, ...], n: int, backend: str,
     row = json.loads(out.stdout.strip().splitlines()[-1])
     csv(f"mapping_scale,{row['case']},implicit,{row['warm_s']*1e3:.0f},"
         f"ms_place_time,cold={row['cold_s']:.2f}s,"
+        f"replace={row['replace_s']*1e3:.0f}ms,"
         f"rss={row['peak_rss_bytes']/1e6:.0f}MB,"
         f"dense_would_be={row['dense_matrix_bytes']/1e9:.2f}GB,"
         f"lazy={row['lazy']},backend={row['backend']}")
@@ -245,6 +273,30 @@ def implicit_smoke(csv=print, backend: str = "numpy") -> int:
         csv(f"mapping_scale,implicit_smoke,rss_headroom,"
             f"{row['dense_matrix_bytes']/max(row['peak_rss_bytes'],1):.1f},x,"
             f"dense-matrix bytes / peak RSS")
+    # 128k-node leg, behind the wall-budget guard: run it only when the
+    # machine-normalised prediction fits — slow runners skip, not time out
+    est = IMPLICIT_128K_EST_S * scale
+    if est > IMPLICIT_128K_GUARD_S:
+        csv(f"mapping_scale,implicit_smoke_128k,SKIP,predicted {est:.0f}s "
+            f"> guard {IMPLICIT_128K_GUARD_S:.0f}s on this machine")
+    else:
+        _, dims, n = IMPLICIT_128K_CASE
+        row = _measure_implicit(dims, n, backend, csv=csv)
+        limit = IMPLICIT_128K_WALL_BUDGET_S * scale
+        if not row["lazy"] or row["peak_rss_bytes"] >= row["dense_matrix_bytes"]:
+            csv(f"mapping_scale,implicit_smoke_128k,FAIL,lazy={row['lazy']},"
+                f"rss={row['peak_rss_bytes']/1e6:.0f}MB vs dense "
+                f"{row['dense_matrix_bytes']/1e9:.0f}GB")
+            rc = 1
+        elif row["warm_s"] > limit:
+            csv(f"mapping_scale,implicit_smoke_128k,FAIL,warm "
+                f"{row['warm_s']:.1f}s > machine-normalised budget "
+                f"{limit:.1f}s")
+            rc = 1
+        else:
+            csv(f"mapping_scale,implicit_smoke_128k,PASS,"
+                f"warm={row['warm_s']:.1f}s,replace={row['replace_s']:.2f}s,"
+                f"rss={row['peak_rss_bytes']/1e6:.0f}MB")
     if rc == 0:
         csv("mapping_scale,implicit_smoke,PASS,lazy + within budgets")
     return rc

@@ -28,6 +28,10 @@ Backend axis (the jax placement backend of ``repro.core.backend``):
         exits 1 unless jax beats numpy at n >= 1024.  --write appends the
         measured speedups to benchmarks/BENCH_backend.json; --fast trims
         repeats for CI.
+    ... refine_scale --backend-bench --devices 8   # adds the sharded duel:
+        single-device vmap vs shard_map over 8 (virtual) devices on a
+        portfolio-shaped candidate stack; exits 1 unless the sharded
+        dispatch wins and stays bit-identical.
 """
 from __future__ import annotations
 
@@ -258,6 +262,87 @@ BACKEND_CASES = [
     ("refine/torus-16x16x16/n1024x16", (16, 16, 16), 1024, 16, True, True),
 ]
 BACKEND_GATE_MIN_N = 1024
+# the sharded duel case: TOFA's biggest candidate stack on the 4096-node
+# torus, refined through the implicit-coordinate path
+SHARDED_CASE = ("shard/torus-16x16x16/n1024x16", (16, 16, 16), 1024, 16)
+
+
+def _sharded_duel(csv, *, n_dev: int, repeats: int) -> tuple[dict, int]:
+    """Single-device vmap vs sharded candidate-stack refine.
+
+    The stack is portfolio-shaped: most candidates are near-converged
+    (TOFA's multilevel/greedy seeds) and a few are raw restarts, spread
+    across shards.  That heterogeneity is where sharding earns its
+    speedup on any device count — each shard's ``lax.while_loop`` stops
+    when *its* candidates converge, while the single-device vmap runs
+    every lane until the slowest candidate in the whole stack does.
+    Placements must stay bit-identical between the two dispatches.
+    """
+    from repro.core import mapping_jax
+    name, dims, n, n_cands = SHARDED_CASE
+    topo = TorusTopology(dims)
+    Dl = topo.lazy_distance()
+    wl = npb_dt_like(n, seed=3)
+    G = wl.comm.weights("volume")
+    rng = np.random.default_rng(1)
+    n_raw = min(4, max(1, n_cands // 4))
+    P = np.stack([rng.permutation(topo.n_nodes)[:n]
+                  for _ in range(n_cands)])
+    with core_backend.use("jax", devices=1):
+        # refine the seed candidates to a swap fixed point so their lanes
+        # converge in a pass or two when re-refined inside the duel
+        seeds = P[:n_cands - n_raw]
+        for _ in range(6):
+            nxt = mapping_jax.refine_many(G, Dl, seeds)
+            done = np.array_equal(nxt, seeds)
+            seeds = nxt
+            if done:
+                break
+    stack = np.concatenate([seeds, P[n_cands - n_raw:]])
+    # interleave the raw candidates so they land in different shards
+    order = np.argsort(np.r_[
+        np.setdiff1d(np.arange(n_cands),
+                     np.arange(n_raw) * (n_cands // n_raw)),
+        np.arange(n_raw) * (n_cands // n_raw)], kind="stable")
+    stack = stack[order]
+
+    with core_backend.use("jax", devices=1):
+        R_single = mapping_jax.refine_many(G, Dl, stack)   # compile (cold)
+    with core_backend.use("jax"):
+        R_shard = mapping_jax.refine_many(G, Dl, stack)
+    t_single, t_shard = [], []
+    for _ in range(repeats):
+        with core_backend.use("jax", devices=1):
+            t0 = time.perf_counter()
+            mapping_jax.refine_many(G, Dl, stack)
+            t_single.append(time.perf_counter() - t0)
+        with core_backend.use("jax"):
+            t0 = time.perf_counter()
+            mapping_jax.refine_many(G, Dl, stack)
+            t_shard.append(time.perf_counter() - t0)
+    identical = bool(np.array_equal(R_single, R_shard))
+    speedup = min(t_single) / min(t_shard)
+    row = {
+        "case": name, "n_procs": n, "n_candidates": n_cands,
+        "n_nodes": int(np.prod(dims)), "devices": int(n_dev),
+        "single_warm_s": round(min(t_single), 6),
+        "sharded_warm_s": round(min(t_shard), 6),
+        "sharded_speedup": round(speedup, 2),
+        "placements_identical": identical,
+    }
+    csv(f"backend_bench,{name},sharded_speedup,{speedup:.2f},x,"
+        f"devices={n_dev},single={min(t_single)*1e3:.0f}ms,"
+        f"sharded={min(t_shard)*1e3:.0f}ms,identical={identical}")
+    rc = 0
+    if not identical:
+        csv(f"backend_bench,{name},FAIL,sharded placements differ from "
+            f"single-device vmap")
+        rc = 1
+    if speedup <= 1.0:
+        csv(f"backend_bench,{name},FAIL,sharded refine slower than "
+            f"single-device vmap on {n_dev} devices")
+        rc = 1
+    return row, rc
 
 
 def backend_bench(csv=print, write: bool = False, fast: bool = False,
@@ -317,6 +402,16 @@ def backend_bench(csv=print, write: bool = False, fast: bool = False,
             csv(f"backend_bench,{name},FAIL,jax slower than numpy at "
                 f"n>={BACKEND_GATE_MIN_N}")
             rc = 1
+    n_dev = core_backend.get_backend("jax").device_count
+    if n_dev > 1:
+        shard_row, shard_rc = _sharded_duel(csv, n_dev=n_dev,
+                                            repeats=repeats)
+        rows.append(shard_row)
+        rc |= shard_rc
+    else:
+        csv("backend_bench,sharded,SKIP,single local device (set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=N or "
+            "--devices N)")
     if write:
         doc = {"schema": SCHEMA_VERSION,
                "description": (
@@ -380,7 +475,22 @@ def main() -> int:
                     help="numpy-vs-jax duel on the refine kernel; exits 1 "
                          "unless jax beats numpy at n >= 1024 (with --write, "
                          "appends to BENCH_backend.json)")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="force N virtual host devices for the sharded "
+                         "refine duel (sets XLA_FLAGS "
+                         "--xla_force_host_platform_device_count before "
+                         "jax initialises; CPU-only convenience)")
     args = ap.parse_args()
+    if args.devices and args.devices > 1:
+        if "jax" in sys.modules:
+            csv_err = ("refine_scale,devices,WARN,jax already imported; "
+                       "--devices has no effect (set XLA_FLAGS in the "
+                       "environment instead)")
+            print(csv_err)
+        else:
+            flag = f"--xla_force_host_platform_device_count={args.devices}"
+            os.environ["XLA_FLAGS"] = \
+                (os.environ.get("XLA_FLAGS", "") + " " + flag).strip()
     if args.backend_bench:
         return backend_bench(write=args.write, fast=args.fast,
                              label=args.label)

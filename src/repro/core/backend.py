@@ -76,7 +76,8 @@ class JaxBackend:
     name = "jax"
     is_jax = True
 
-    def __init__(self, dtype: str = "float64", max_cached_devices: int = 8):
+    def __init__(self, dtype: str = "float64", max_cached_devices: int = 8,
+                 devices: Optional[int] = None):
         if dtype not in ("float32", "float64"):
             raise ValueError(f"jax backend dtype must be float32|float64, "
                              f"got {dtype!r}")
@@ -87,6 +88,10 @@ class JaxBackend:
                 "the 'jax' placement backend needs the optional jax "
                 "dependency: pip install repro-tofa[jax]") from e
         self.dtype = dtype
+        # cap on the devices the sharded candidate-stack dispatch may
+        # use; 0 = all local devices.  REPRO_JAX_DEVICES=1 pins the
+        # single-device vmap path on multi-device hosts.
+        self.devices = int(_resolve_devices(devices))
         # host ndarray -> device array, LRU by object identity.  The engine
         # hands the same cached D / Eq. 1 weight matrix object to every
         # placement against one (topology, health) state, so identity is
@@ -100,14 +105,24 @@ class JaxBackend:
         # transfer.  The counters make that contract testable
         # (tests/test_state.py asserts zero new transfers across a warm
         # state-churn sequence).
-        self.stats = {"transfers": 0, "transfer_hits": 0}
+        self.stats = {"transfers": 0, "transfer_hits": 0,
+                      "sharded_dispatches": 0}
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
-        return f"<backend {self.name} dtype={self.dtype}>"
+        return (f"<backend {self.name} dtype={self.dtype} "
+                f"devices={self.devices or 'all'}>")
 
     @property
     def np_dtype(self):
         return np.float32 if self.dtype == "float32" else np.float64
+
+    @property
+    def device_count(self) -> int:
+        """Devices visible to the sharded refine dispatch: local device
+        count clamped by the ``devices`` cap (0 = uncapped)."""
+        import jax
+        n = len(jax.local_devices())
+        return min(n, self.devices) if self.devices else n
 
     def scope(self):
         """Context the jitted kernels run under: scoped x64 for the
@@ -166,20 +181,30 @@ _NUMPY = NumpyBackend()
 _JAX: Optional[JaxBackend] = None
 
 
-def _jax_backend(dtype: Optional[str] = None) -> JaxBackend:
+def _resolve_devices(devices: Optional[int]) -> int:
+    """Explicit argument, else ``REPRO_JAX_DEVICES``, else 0 (= all)."""
+    if devices is not None:
+        return int(devices)
+    return int(os.environ.get("REPRO_JAX_DEVICES", "0") or 0)
+
+
+def _jax_backend(dtype: Optional[str] = None,
+                 devices: Optional[int] = None) -> JaxBackend:
     global _JAX
     want = dtype or os.environ.get("REPRO_JAX_DTYPE", "float64")
-    if _JAX is None or _JAX.dtype != want:
-        _JAX = JaxBackend(dtype=want)
+    want_dev = _resolve_devices(devices)
+    if _JAX is None or _JAX.dtype != want or _JAX.devices != want_dev:
+        _JAX = JaxBackend(dtype=want, devices=want_dev)
     return _JAX
 
 
-def get_backend(name: str, dtype: Optional[str] = None):
+def get_backend(name: str, dtype: Optional[str] = None,
+                devices: Optional[int] = None):
     """Resolve a backend by name (``numpy`` | ``jax``)."""
     if name == "numpy":
         return _NUMPY
     if name == "jax":
-        return _jax_backend(dtype)
+        return _jax_backend(dtype, devices)
     raise ValueError(f"unknown backend {name!r}; have: numpy, jax")
 
 
@@ -191,23 +216,29 @@ def active():
     return _ACTIVE
 
 
-def set_backend(name: str, dtype: Optional[str] = None):
+def set_backend(name: str, dtype: Optional[str] = None,
+                devices: Optional[int] = None):
     """Set the process-wide active backend; returns the backend object."""
     global _ACTIVE
-    _ACTIVE = get_backend(name, dtype)
+    _ACTIVE = get_backend(name, dtype, devices)
     return _ACTIVE
 
 
 @contextlib.contextmanager
-def use(name: str, dtype: Optional[str] = None) -> Iterator[object]:
+def use(name: str, dtype: Optional[str] = None,
+        devices: Optional[int] = None) -> Iterator[object]:
     """Scoped backend switch::
 
         with backend.use("jax"):
             engine.place(request)        # jitted kernels, device-resident D
+
+    ``devices`` caps the sharded refine dispatch (``devices=1`` pins the
+    single-device vmap path; 0/None follows ``REPRO_JAX_DEVICES`` or all
+    local devices).
     """
     global _ACTIVE
     prev = _ACTIVE
-    _ACTIVE = get_backend(name, dtype)
+    _ACTIVE = get_backend(name, dtype, devices)
     try:
         yield _ACTIVE
     finally:

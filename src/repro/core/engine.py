@@ -40,9 +40,46 @@ import numpy as np
 
 from . import backend as _backend
 from .comm_graph import CommGraph
+from .lazydist import is_lazy
 from .mapping import avg_dilation, hop_bytes
 from .policies import PolicyContext, available_policies, get_policy
 from .state import ClusterState, StateDiff
+
+# free-row block budget of the lazy-exact replace cost: at most this many
+# implicit W entries are materialised at a time (~32 MB of float64)
+_REPLACE_BLOCK_ELEMS = 1 << 22
+
+
+def _lazy_replace_cost(W, G_w: np.ndarray, i: int, peers: np.ndarray,
+                       placement: np.ndarray, free: np.ndarray) -> np.ndarray:
+    """Traffic-weighted cost of every free node for displaced proc ``i``
+    against a :class:`~repro.core.lazydist.LazyDistance` ``W`` — O(block)
+    memory instead of the dense gather's O(|free| * |peers|).
+
+    Exactness: zero-weight peers are dropped before the gather (their
+    products contribute exactly 0.0 — in-tree weights are integers, so
+    every partial sum is exact in float64), and the blocking is over free
+    *rows* only, so each cost entry is still one full-row reduction —
+    bit-identical to the unblocked dense expression.
+    """
+    if peers.size:
+        gw = G_w[i, peers]
+        nz = gw != 0.0
+        peers, gw = peers[nz], gw[nz]
+    cost = np.empty(free.size, dtype=np.float64)
+    if peers.size:
+        cols = placement[peers]
+        step = max(1, _REPLACE_BLOCK_ELEMS // max(1, cols.size))
+        for s in range(0, free.size, step):
+            blk = free[s:s + step]
+            cost[s:s + step] = W[np.ix_(blk, cols)] @ gw
+    else:
+        # isolated proc: most central node (full row sums)
+        step = max(1, _REPLACE_BLOCK_ELEMS // max(1, W.shape[0]))
+        for s in range(0, free.size, step):
+            blk = free[s:s + step]
+            cost[s:s + step] = W[blk].sum(axis=1)
+    return cost
 
 
 @runtime_checkable
@@ -757,9 +794,13 @@ class PlacementEngine:
         # heaviest talkers first: they constrain the remaining choices most
         order = displaced[np.argsort(ctx.G_w[displaced].sum(axis=1))[::-1]]
         settled = kept.copy()
+        lazy_W = is_lazy(W)
         for i in order:
             peers = np.flatnonzero(settled)
-            if peers.size:
+            if lazy_W:
+                cost = _lazy_replace_cost(W, ctx.G_w, int(i), peers,
+                                          placement, free)
+            elif peers.size:
                 cost = W[np.ix_(free, placement[peers])] @ ctx.G_w[i, peers]
             else:
                 cost = W[free].sum(axis=1)  # isolated: most central node

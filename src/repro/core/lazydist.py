@@ -26,10 +26,12 @@ for flagged pairs only — O(f * n^(1/ndim)) work per requested row for f
 penalised nodes, instead of O(n^2 * hops) for the dense derivation.
 Fat-tree weighting is endpoint-form and trivially elementwise.
 
-The healthy uniform-cost torus case additionally exposes an
-``implicit`` spec (coordinates + dims + scale) that lets the jax
-backend compute distances in-kernel (:mod:`repro.kernels.hop_dist`)
-instead of going through ``__getitem__`` at all.
+The healthy uniform-cost torus case — and the fat-tree in *every*
+health state, its weighting being endpoint-form — additionally exposes
+an ``implicit`` spec (coordinates + metric kind + scale + optional
+penalty vector) that lets the jax backend compute distances in-kernel
+(:mod:`repro.kernels.hop_dist`) instead of going through
+``__getitem__`` at all.
 """
 from __future__ import annotations
 
@@ -44,12 +46,21 @@ from repro.kernels.hop_dist.ops import torus_hop_np
 @dataclasses.dataclass(frozen=True)
 class ImplicitSpec:
     """What the jax backend needs to compute distances in-kernel:
-    per-node integer coordinates, static torus dims, a uniform scale."""
+    per-node integer coordinates, a static metric spec, a uniform scale.
+
+    ``kind="torus"`` interprets ``coords`` against wraparound ``dims``;
+    ``kind="fattree"`` interprets them as (pod, edge, host) triples with
+    ``dims=()`` and carries the per-node endpoint ``penalty`` vector
+    (zeros when healthy — always present so the backend's identity-keyed
+    device-transfer cache has a stable array to pin).
+    """
 
     coords: np.ndarray          # (N, ndim) float64 — stable identity for
                                 # the backend's device-transfer cache
     dims: tuple[int, ...]
     scale: float
+    kind: str = "torus"
+    penalty: Optional[np.ndarray] = None    # (N,) float64, fat-tree only
 
 
 class LazyDistance:
@@ -214,7 +225,13 @@ class TorusLazyDistance(LazyDistance):
 class FatTreeLazyDistance(LazyDistance):
     """Implicit endpoint-form Eq. (1) weights of a
     :class:`FatTreeTopology` (exact for any health state — paths touch
-    compute nodes only at their endpoints)."""
+    compute nodes only at their endpoints).
+
+    Because the fault/straggler weighting is a per-endpoint penalty
+    gather — no route walks — the adapter exposes an ``implicit`` spec
+    for **every** health state, so the jax backend compiles fat-tree
+    distances in-kernel even under faults (tori only qualify healthy).
+    """
 
     def __init__(self, topo, p_f: Optional[np.ndarray] = None,
                  c: float = 1.0, straggler: Optional[np.ndarray] = None):
@@ -229,18 +246,19 @@ class FatTreeLazyDistance(LazyDistance):
         if straggler is not None:
             penalty += c * np.asarray(straggler, dtype=np.float64)
         self._penalty = penalty if (penalty > 0).any() else None
+        # the zeros vector is kept (not None) so the spec always carries
+        # a stable array for the backend's identity-keyed transfer cache
+        self._spec = ImplicitSpec(
+            coords=self.coords.astype(np.float64), dims=(), scale=self.c,
+            kind="fattree", penalty=penalty)
+
+    @property
+    def implicit(self) -> Optional[ImplicitSpec]:
+        return self._spec
 
     def _elems(self, u: np.ndarray, v: np.ndarray) -> np.ndarray:
-        cu = self.coords[u]
-        cv = self.coords[v]
-        same_pod = cu[..., 0] == cv[..., 0]
-        same_edge = same_pod & (cu[..., 1] == cv[..., 1])
-        same_host = same_edge & (cu[..., 2] == cv[..., 2])
-        hops = np.full(np.broadcast(u, v).shape, 6.0)
-        hops[same_pod] = 4.0
-        hops[same_edge] = 2.0
-        hops[same_host] = 0.0
-        out = self.c * hops
+        from repro.kernels.hop_dist.ops import fattree_hop_np
+        out = self.c * fattree_hop_np(self.coords[u], self.coords[v])
         if self._penalty is not None:
             out += np.where(u != v, self._penalty[u] + self._penalty[v], 0.0)
         return out

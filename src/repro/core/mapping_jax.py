@@ -32,6 +32,18 @@ What the port changes is the *cost model*, not the algorithm:
   single device call.  Converged candidates are naturally idempotent
   (no improving swap exists), so the batched loop runs until the last
   candidate converges without perturbing the others.
+* **The candidate stack shards across devices.**  With more than one
+  visible device (``backend.JaxBackend.device_count`` > 1) the stack is
+  split along the candidate axis with ``shard_map`` — guest structure
+  and distances replicated, batch edge-padded to a device multiple — so
+  each device refines only its slice and each shard's ``while_loop``
+  stops when *its own* candidates converge.  Candidates never interact,
+  so the sharded dispatch is bit-identical to the single-device one
+  (``tests/test_sharded_refine.py``).  Two XLA:CPU landmines are worked
+  around deliberately: operands are replicated from the **host** (see
+  ``_shard_args``) and the mover-order sort is computed without the
+  ``sort`` HLO inside sharded executables (see ``_refine_one``'s
+  ``sortless`` path).
 * **Distance matrices are device-resident.**  Hosts hand the same cached
   (topology, health) matrix object to every placement, and the backend
   keeps its symmetrised device copy alive across jobs, so a batch of
@@ -102,23 +114,51 @@ def guest_supported(G_w: np.ndarray) -> bool:
 
 def lazy_supported(D) -> bool:
     """A lazy distance adapter is served by this module only when it
-    exposes an implicit spec (healthy uniform torus) — distances are then
-    computed in-kernel from the (N, ndim) coordinate table
+    exposes an implicit spec — distances are then computed in-kernel
     (:mod:`repro.kernels.hop_dist`), never gathered from a stored matrix.
-    Fault-weighted lazy adapters run the NumPy kernels instead."""
+    Healthy uniform tori and fat-trees in *any* health state qualify
+    (fat-tree fault/straggler weighting is endpoint-form, so it jits as a
+    penalty-vector gather); fault-weighted tori need scalar route walks
+    and run the NumPy kernels instead."""
     return getattr(D, "implicit", None) is not None
 
 
 def _dist_fns(Ds, dims, scale):
     """The two distance accessors of the refine/score loops, closed over
-    either a dense (N, N) matrix (``dims is None``) or an (N, ndim)
-    coordinate table with static torus ``dims`` (implicit mode)."""
+    either a dense (N, N) matrix (``dims is None``), an (N, ndim)
+    coordinate table with static torus ``dims``, or — when ``dims`` is
+    the static marker ``("fattree",)`` — a ``(coords, penalty)`` pair
+    implementing the endpoint-form fat-tree metric
+    (:class:`repro.core.lazydist.FatTreeLazyDistance`)."""
     if dims is None:
         def dist_pairs(a, b):
             return Ds[a, b]
 
         def dist_row(node, p):
             return Ds[node][p]
+    elif dims == ("fattree",):
+        from repro.kernels.hop_dist.ops import fattree_hop_pairs
+        from repro.kernels.hop_dist.ref import fattree_hop_elems_ref
+        coords, pen = Ds
+
+        def _at(u, v):
+            # c * hops + endpoint penalties — same expression (and
+            # summation order) as FatTreeLazyDistance._elems
+            hops = scale * fattree_hop_elems_ref(coords[u], coords[v])
+            return hops + jnp.where(u != v, pen[u] + pen[v], 0.0)
+
+        dist_pairs = _at
+
+        def dist_row(node, p):
+            return _at(node, p)
+
+        def _all_pairs(u, v):
+            hops = scale * fattree_hop_pairs(coords[u], coords[v])
+            return hops + jnp.where(
+                u[:, None] != v[None, :],
+                pen[u][:, None] + pen[v][None, :], 0.0)
+
+        dist_pairs.all_pairs = _all_pairs
     else:
         from repro.kernels.hop_dist.ops import torus_hop_pairs
         from repro.kernels.hop_dist.ref import torus_hop_elems_ref
@@ -195,7 +235,7 @@ def _pad_placements(placements: np.ndarray) -> tuple[np.ndarray, int, int]:
 
 def _refine_one(p0, idx, val, G_dense, Ds, n_valid, *, movers: int,
                 total_passes: int, dense: bool, dims=None,
-                scale: float = 1.0):
+                scale: float = 1.0, sortless: bool = False):
     """Refine ONE placement; decision-identical to the NumPy loop.
 
     ``p0`` (n,) int32 node ids (tail >= n_valid is masked padding),
@@ -209,7 +249,7 @@ def _refine_one(p0, idx, val, G_dense, Ds, n_valid, *, movers: int,
     n = p0.shape[0]
     rows = jnp.arange(n, dtype=jnp.int32)
     valid = rows < n_valid
-    fdt = Ds.dtype
+    fdt = (Ds[0] if isinstance(Ds, tuple) else Ds).dtype
     dist_pairs, dist_row = _dist_fns(Ds, dims, scale)
 
     if dims is None:
@@ -220,23 +260,31 @@ def _refine_one(p0, idx, val, G_dense, Ds, n_valid, *, movers: int,
     contrib0 = (val.astype(fdt)
                 * jnp.take_along_axis(M0, idx, axis=1)).sum(-1)
 
-    def gains_at(M, contrib, i):
-        """gains = contrib[i] + contrib - 2*C[i] - M@G[i] - G@M[i]."""
+    def select_mover(M, contrib, i):
+        """(best gain, partner j) for mover ``i`` — the fused
+        gains-row + masked-argmax + accept step.  ``j == i`` encodes a
+        rejected mover (identity swap).  The dense branch is a single
+        kernel (:func:`repro.kernels.swap_gain.ops.swap_select`) so the
+        gains row never leaves it; the sparse branch applies the same
+        mask/argmax/threshold to the CSR-gathered row."""
         if dense:
-            from repro.kernels.swap_gain.ops import swap_gain
-            g = swap_gain(M, G_dense, contrib, i)
-        else:
-            # M is kept exactly symmetric, so every column read below is
-            # a (contiguous) row read instead
-            idx_i, val_i = idx[i], val[i].astype(fdt)
-            Mrow_i = M[i]
-            a = val_i @ M[idx_i, :]                          # M @ G[i]
-            b = (val.astype(fdt)
-                 * Mrow_i[idx]).sum(-1)                      # G @ M[i]
-            Ci = jnp.zeros(n, fdt).at[idx_i].add(val_i * Mrow_i[idx_i])
-            g = contrib[i] + contrib - 2.0 * Ci - a - b
+            from repro.kernels.swap_gain.ops import swap_select
+            return swap_select(M, G_dense, contrib, i, n_valid)
+        # M is kept exactly symmetric, so every column read below is
+        # a (contiguous) row read instead
+        idx_i, val_i = idx[i], val[i].astype(fdt)
+        Mrow_i = M[i]
+        a = val_i @ M[idx_i, :]                          # M @ G[i]
+        b = (val.astype(fdt)
+             * Mrow_i[idx]).sum(-1)                      # G @ M[i]
+        Ci = jnp.zeros(n, fdt).at[idx_i].add(val_i * Mrow_i[idx_i])
+        g = contrib[i] + contrib - 2.0 * Ci - a - b
         g = g.at[i].set(0.0)
-        return jnp.where(valid, g, -jnp.inf)
+        g = jnp.where(valid, g, -jnp.inf)
+        j_raw = jnp.argmax(g)
+        gain = g[j_raw]
+        j = jnp.where((gain > _GAIN_EPS) & (i < n_valid), j_raw, i)
+        return gain, j.astype(jnp.int32)
 
     def sparse_col(i):
         """Nonzero structure of G[:, i] (symmetric guest): row i's."""
@@ -245,14 +293,12 @@ def _refine_one(p0, idx, val, G_dense, Ds, n_valid, *, movers: int,
     def mover_step(t, s):
         p, M, contrib, improved, order = s
         i = order[t]
-        gains = gains_at(M, contrib, i)
-        j_raw = jnp.argmax(gains)
-        do = (i < n_valid) & (gains[j_raw] > _GAIN_EPS)
-        # rejected movers run an *identity swap* (j := i): the M updates
-        # below then rewrite rows with their current exact values, so no
-        # O(n^2) masked select of M is ever needed and XLA keeps the
-        # loop-carried matrix in place.
-        j = jnp.where(do, j_raw, i)
+        # rejected movers arrive as an *identity swap* (j == i): the M
+        # updates below then rewrite rows with their current exact
+        # values, so no O(n^2) masked select of M is ever needed and XLA
+        # keeps the loop-carried matrix in place.
+        gain, j = select_mover(M, contrib, i)
+        do = (i < n_valid) & (gain > _GAIN_EPS)
 
         oi, oj = p[i], p[j]
         p_old = p
@@ -299,7 +345,29 @@ def _refine_one(p0, idx, val, G_dense, Ds, n_valid, *, movers: int,
     def pass_body(state):
         p, M, contrib, stop, t = state
         key = jnp.where(valid, contrib, -jnp.inf)
-        order = jnp.argsort(-key)[:movers].astype(jnp.int32)
+        if sortless:
+            # Stable descending argsort WITHOUT the ``sort`` HLO: rank
+            # each entry by pairwise comparison (ties broken by index,
+            # exactly ``np.argsort(-key, kind="stable")``) and scatter
+            # the identity through the rank permutation.  The sharded
+            # executables need this: XLA:CPU's SPMD partitioner wraps the
+            # ``sort`` primitive inside a shard_map body in channel-
+            # tagged AllReduces even though the op is lane-local, which
+            # deadlocks its rendezvous and corrupts non-zero ranks.
+            # Every other primitive in this loop partitions cleanly, so
+            # only the sort is rewritten; the O(n^2) comparison block is
+            # cheap at the (<= a few k procs) sizes refine runs at.
+            beats = ((key[None, :] > key[:, None])
+                     | ((key[None, :] == key[:, None])
+                        & (rows[None, :] < rows[:, None])))
+            rank = jnp.sum(beats, axis=1, dtype=jnp.int32)
+            order = (jnp.zeros(n, jnp.int32).at[rank].set(rows))[:movers]
+        else:
+            # index tie-break folded into the comparison (two-key sort)
+            # rather than ``is_stable`` alone: a unique total order keeps
+            # any lowering bit-identical to the NumPy reference
+            _, order = lax.sort((-key, rows), num_keys=2)
+            order = order[:movers].astype(jnp.int32)
         p, M, contrib, improved, _ = lax.fori_loop(
             0, movers, mover_step, (p, M, contrib, jnp.bool_(False), order))
         return p, M, contrib, ~improved, t + 1
@@ -324,29 +392,121 @@ def _refine_jit(movers: int, total_passes: int, dense: bool,
     return jax.jit(batched)
 
 
+@functools.lru_cache(maxsize=8)
+def _mesh(n_dev: int):
+    """One cached 1-D device mesh per device count, shared between the
+    shard_map trace and the explicit operand placement in
+    :func:`refine_many` (the same mesh object must back both)."""
+    from jax.sharding import Mesh
+    return Mesh(np.array(jax.devices()[:n_dev]), ("dev",))
+
+
+@functools.lru_cache(maxsize=32)
+def _refine_jit_sharded(movers: int, total_passes: int, dense: bool,
+                        dims, scale: float, n_dev: int):
+    """Candidate-stack refine sharded over ``n_dev`` devices.
+
+    ``shard_map`` splits the (B, n) placement stack along the candidate
+    axis — guest structure and distances are replicated — so each device
+    vmaps only its B/n_dev slice, and each shard's ``lax.while_loop``
+    stops as soon as *its own* candidates converge (the single-device
+    vmap runs every pass until the slowest candidate in the whole stack
+    converges).  Candidates never interact, so the result is
+    bit-identical to the single-device dispatch in any shard order.
+
+    Callers must hand in operands **already placed** on this mesh
+    (stack sharded over ``"dev"``, everything else replicated — see
+    ``_shard_args``): letting jit reshard single-device-committed inputs
+    makes XLA:CPU synthesise cross-module collectives, which both
+    deadlock its rendezvous under concurrent dispatches and mis-replicate
+    on sub-meshes.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    fn = functools.partial(_refine_one, movers=movers,
+                           total_passes=total_passes, dense=dense,
+                           dims=dims, scale=scale, sortless=True)
+    batched = jax.vmap(fn, in_axes=(0, None, None, None, None, None))
+    sharded = shard_map(batched, mesh=_mesh(n_dev),
+                        in_specs=(P("dev"), P(), P(), P(), P(), P()),
+                        out_specs=P("dev"), check_rep=False)
+    return jax.jit(sharded)
+
+
+def _shard_args(n_dev: int, P_stack, *replicated):
+    """Place the candidate stack sharded over the mesh's ``dev`` axis and
+    every other operand fully replicated, so the jitted shard_map never
+    has to reshard committed single-device arrays itself.
+
+    Replication is routed through the **host**: ``device_put`` of an
+    array already committed to one device compiles a device-to-device
+    broadcast, which XLA:CPU emits as a cross-module AllReduce that both
+    deadlocks its rendezvous and hands corrupted replicas to non-zero
+    ranks (deterministically wrong lanes).  A host ``np.ndarray`` takes
+    the plain host-to-each-device copy path instead, which is collective
+    free."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh = _mesh(n_dev)
+    shard = NamedSharding(mesh, P("dev"))
+    rep = NamedSharding(mesh, P())
+    out = [jax.device_put(np.asarray(P_stack), shard)]
+    out.extend(jax.tree_util.tree_map(
+        lambda x: jax.device_put(np.asarray(x), rep), arg)
+        for arg in replicated)
+    return out
+
+
 def _device_distances(D, be):
-    """((device array, dims, scale)) — the dense symmetrised matrix, or
-    the coordinate table + static spec in implicit mode."""
+    """``(device operand, static spec key, scale)`` — the dense
+    symmetrised matrix (key ``None``), the coordinate table with static
+    torus ``dims``, or the ``(coords, penalty)`` pair keyed
+    ``("fattree",)`` in fat-tree implicit mode."""
     spec = getattr(D, "implicit", None)
     if spec is None:
         return be.device_matrix(_sym_host(D)), None, 1.0
+    if getattr(spec, "kind", "torus") == "fattree":
+        operand = (be.device_matrix(spec.coords),
+                   be.device_matrix(spec.penalty))
+        return operand, ("fattree",), float(spec.scale)
     return be.device_matrix(spec.coords), spec.dims, float(spec.scale)
 
 
 def refine_many(G_w: np.ndarray, D: np.ndarray, placements: np.ndarray,
                 max_passes: int = 3, movers: int = 64,
                 extra_passes: int = 13) -> np.ndarray:
-    """Batched ``_pairwise_refine``: (B, n) placements in one dispatch."""
+    """Batched ``_pairwise_refine``: (B, n) placements in one dispatch.
+
+    With multiple visible devices (``backend.JaxBackend.device_count``
+    > 1, e.g. under ``XLA_FLAGS=--xla_force_host_platform_device_count``
+    or a real multi-chip topology) the candidate stack is sharded across
+    them; the batch axis is padded to a device multiple by repeating the
+    last candidate (refinement is deterministic per candidate, so the
+    duplicates are free of side effects and sliced off).
+    """
     be = _be()
     P, n, n_pad = _pad_placements(np.atleast_2d(placements))
     with be.scope():
         idx, val, G_dense, dense = _guest_device(G_w, n_pad, be)
         Ds, dims, scale = _device_distances(D, be)
         movers_eff = min(movers, n_pad)
-        run = _refine_jit(movers_eff, max_passes + extra_passes, dense,
-                          dims, scale)
-        out = run(jnp.asarray(P), idx, val, G_dense, Ds, jnp.int32(n))
-    out = np.asarray(out)[:, :n].astype(np.int64)
+        B = P.shape[0]
+        n_dev = min(int(getattr(be, "device_count", 1)), B)
+        if n_dev > 1:
+            pad_b = (-B) % n_dev
+            if pad_b:
+                P = np.pad(P, ((0, pad_b), (0, 0)), mode="edge")
+            run = _refine_jit_sharded(movers_eff, max_passes + extra_passes,
+                                      dense, dims, scale, n_dev)
+            be.stats["sharded_dispatches"] = (
+                be.stats.get("sharded_dispatches", 0) + 1)
+            args = _shard_args(n_dev, P, idx, val, G_dense, Ds,
+                               jnp.int32(n))
+        else:
+            run = _refine_jit(movers_eff, max_passes + extra_passes, dense,
+                              dims, scale)
+            args = (jnp.asarray(P), idx, val, G_dense, Ds, jnp.int32(n))
+        out = run(*args)
+    out = np.asarray(out)[:B, :n].astype(np.int64)
     return out if np.asarray(placements).ndim == 2 else out[0]
 
 

@@ -1,14 +1,16 @@
-"""Implicit torus hop distance — Pallas TPU kernel.
+"""Implicit hop distance — Pallas TPU kernels (torus and fat-tree).
 
-Computes an (m, k) block of wraparound hop distances directly from the
-coordinate tables, so the mapping hot path never gathers from (or
-materialises) a stored O(N^2) matrix.  Coordinates are fed transposed —
-``(ndim, m)`` / ``(ndim, k)`` — so the large axis is the TPU lane
-dimension; the kernel tiles the ``cu`` side into row blocks resident in
-VMEM, keeps the full ``cv`` table broadcast to every block, and unrolls
-the per-dimension min(|d|, dim-|d|) accumulation at trace time (``dims``
-is static, 2–4 entries for the in-tree tori).  One write per output
-block, no dynamic gathers in the body.
+Computes an (m, k) block of hop distances directly from the coordinate
+tables, so the mapping hot path never gathers from (or materialises) a
+stored O(N^2) matrix.  Coordinates are fed transposed — ``(ndim, m)`` /
+``(ndim, k)`` — so the large axis is the TPU lane dimension; each kernel
+tiles the ``cu`` side into row blocks resident in VMEM, keeps the full
+``cv`` table broadcast to every block, and evaluates its metric inline:
+the torus kernel unrolls the per-dimension min(|d|, dim-|d|)
+accumulation at trace time (``dims`` is static, 2–4 entries for the
+in-tree tori); the fat-tree kernel nests the (pod, edge, host) level
+matches branchlessly.  One write per output block, no dynamic gathers
+in the bodies.
 """
 from __future__ import annotations
 
@@ -58,6 +60,54 @@ def torus_hop_tpu(cu, cv, dims, block_rows: int = 256,
 
     out = pl.pallas_call(
         _hop_kernel(tuple(dims)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((nd, block_rows), lambda r: (0, r)),  # cu block
+            pl.BlockSpec((nd, k_pad), lambda r: (0, 0)),       # cv full
+        ],
+        out_specs=pl.BlockSpec((block_rows, k_pad), lambda r: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((m_pad, k_pad), cu.dtype),
+        interpret=interpret,
+    )(cuT, cvT)
+    return out[:m, :k]
+
+
+def _fattree_kernel(cu_ref, cv_ref, o_ref):
+    # branchless level match: each nested level subtracts 2 hops
+    # (identical arithmetic to .ref.fattree_hop_elems_ref)
+    same_pod = cu_ref[0, :][:, None] == cv_ref[0, :][None, :]
+    same_edge = same_pod & (cu_ref[1, :][:, None] == cv_ref[1, :][None, :])
+    same_host = same_edge & (cu_ref[2, :][:, None] == cv_ref[2, :][None, :])
+    o_ref[...] = (6.0 - 2.0 * same_pod - 2.0 * same_edge
+                  - 2.0 * same_host).astype(o_ref.dtype)
+
+
+def fattree_hop_tpu(cu, cv, block_rows: int = 256,
+                    interpret: bool = False):
+    """(m, 3), (k, 3) fat-tree (pod, edge, host) coords -> (m, k) hop
+    counts (0/2/4/6); same transposed-coordinate tiling as
+    :func:`torus_hop_tpu`."""
+    cu = jnp.asarray(cu)
+    cv = jnp.asarray(cv)
+    m, nd = cu.shape
+    k = cv.shape[0]
+    assert nd == 3 and cv.shape[1] == 3
+    block_rows = min(block_rows, max(m, 1))
+    cuT = cu.T                                     # (3, m)
+    cvT = cv.T                                     # (3, k)
+    pad_m = (-m) % block_rows
+    pad_k = (-k) % 128                             # lane-dim alignment
+    if pad_m:
+        # pad with -1: never equal to a real coordinate, so padded
+        # lanes can't alias a real (pod, edge, host) triple
+        cuT = jnp.pad(cuT, ((0, 0), (0, pad_m)), constant_values=-1)
+    if pad_k:
+        cvT = jnp.pad(cvT, ((0, 0), (0, pad_k)), constant_values=-1)
+    m_pad, k_pad = cuT.shape[1], cvT.shape[1]
+    grid = (m_pad // block_rows,)
+
+    out = pl.pallas_call(
+        _fattree_kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((nd, block_rows), lambda r: (0, r)),  # cu block

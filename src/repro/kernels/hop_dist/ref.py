@@ -25,3 +25,20 @@ def torus_hop_elems_ref(cu, cv, dims):
 def torus_hop_pairs_ref(cu, cv, dims):
     """All-pairs form: (m, ndim), (k, ndim) -> (m, k)."""
     return torus_hop_elems_ref(cu[:, None, :], cv[None, :, :], dims)
+
+
+def fattree_hop_elems_ref(cu, cv):
+    """Broadcast-elementwise fat-tree hop count from (pod, edge, host)
+    coordinate triples: 0 same host, 2 same edge switch, 4 same pod,
+    6 across pods.  Written branchless — each matching level subtracts
+    2 hops, and the masks nest (same edge implies same pod) — so the
+    values are the exact small integers of the NumPy fallback."""
+    same_pod = cu[..., 0] == cv[..., 0]
+    same_edge = same_pod & (cu[..., 1] == cv[..., 1])
+    same_host = same_edge & (cu[..., 2] == cv[..., 2])
+    return 6.0 - 2.0 * same_pod - 2.0 * same_edge - 2.0 * same_host
+
+
+def fattree_hop_pairs_ref(cu, cv):
+    """All-pairs form: (m, 3), (k, 3) -> (m, k)."""
+    return fattree_hop_elems_ref(cu[:, None, :], cv[None, :, :])

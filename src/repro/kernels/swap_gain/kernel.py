@@ -12,12 +12,22 @@ half of the op); the kernel is the matvec+combine half.  ``Mi``/``Gi``
 are fed twice — once full-width for the dot products, once as the
 current column block for the fused elementwise term — so the kernel body
 needs no dynamic gathers.
+
+:func:`swap_select_tpu` is the fused whole-step variant: the same gains
+blocks are reduced to a running (best gain, argmax) pair *inside* the
+kernel — the output blocks are revisited across the sequential TPU grid,
+so the n-length gains row never exists outside VMEM — and the final grid
+step applies the accept-or-identity-swap decision in-kernel.  The
+refiner's ``lax.while_loop`` then consumes two scalars per mover instead
+of a gains row.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.swap_gain.ref import GAIN_EPS
 
 
 def _swap_gain_kernel(m_ref, g_ref, mi_ref, gi_ref, mib_ref, gib_ref,
@@ -69,3 +79,90 @@ def swap_gain_tpu(M, G, contrib, i, block_rows: int = 256,
     )(M, G, Mi, Gi, Mi, Gi,
       contrib.reshape(1, np_), ci.reshape(1, 1))
     return out[0, :n]
+
+
+def _swap_select_kernel(iv_ref, m_ref, g_ref, mi_ref, gi_ref, mib_ref,
+                        gib_ref, c_ref, ci_ref, best_ref, j_ref):
+    r = pl.program_id(0)
+    last = pl.num_programs(0) - 1
+    block = m_ref.shape[0]
+    a = jnp.dot(m_ref[...], gi_ref[0, :],
+                preferred_element_type=m_ref.dtype)      # (M @ G[i])[block]
+    b = jnp.dot(g_ref[...], mi_ref[0, :],
+                preferred_element_type=m_ref.dtype)      # (G @ M[i])[block]
+    gains = (ci_ref[0, 0] + c_ref[0, :]
+             - 2.0 * gib_ref[0, :] * mib_ref[0, :] - a - b)[None, :]
+    i = iv_ref[0, 0]
+    n_valid = iv_ref[0, 1]
+    col = (r * block
+           + jax.lax.broadcasted_iota(jnp.int32, (1, block), dimension=1))
+    # the refine-loop mask: identity swap scores 0, padding scores -inf
+    gains = jnp.where(col == i, 0.0, gains)
+    gains = jnp.where(col < n_valid, gains, -jnp.inf)
+    bv = jnp.max(gains)
+    bj = r * block + jnp.argmax(gains).astype(jnp.int32)
+
+    @pl.when(r == 0)
+    def _():
+        best_ref[0, 0] = bv
+        j_ref[0, 0] = bj
+
+    @pl.when(r > 0)
+    def _():
+        # strictly-greater update keeps the earlier block on ties — the
+        # first-occurrence argmax semantics of the reference
+        better = bv > best_ref[0, 0]
+        best_ref[0, 0] = jnp.where(better, bv, best_ref[0, 0])
+        j_ref[0, 0] = jnp.where(better, bj, j_ref[0, 0])
+
+    @pl.when(r == last)
+    def _():
+        # the apply decision: reject (identity swap j := i) unless the
+        # best gain clears the acceptance threshold and i is a live mover
+        ok = (best_ref[0, 0] > GAIN_EPS) & (i < n_valid)
+        j_ref[0, 0] = jnp.where(ok, j_ref[0, 0], i)
+
+
+def swap_select_tpu(M, G, contrib, i, n_valid, block_rows: int = 256,
+                    interpret: bool = False):
+    """Fused (gains row -> masked argmax -> accept-or-identity) step;
+    returns ``(gain, j)`` scalars — see :func:`.ref.swap_select_ref`."""
+    n = M.shape[0]
+    block_rows = min(block_rows, n)
+    pad = (-n) % block_rows
+    Mi = jax.lax.dynamic_slice_in_dim(M, i, 1, axis=0)      # (1, n)
+    Gi = jax.lax.dynamic_slice_in_dim(G, i, 1, axis=0)
+    ci = jax.lax.dynamic_slice_in_dim(contrib, i, 1)
+    if pad:
+        M = jnp.pad(M, ((0, pad), (0, pad)))
+        G = jnp.pad(G, ((0, pad), (0, pad)))
+        contrib = jnp.pad(contrib, (0, pad))
+        Mi = jnp.pad(Mi, ((0, 0), (0, pad)))
+        Gi = jnp.pad(Gi, ((0, 0), (0, pad)))
+    np_ = M.shape[0]
+    grid = (np_ // block_rows,)
+    iv = jnp.stack([jnp.asarray(i, jnp.int32),
+                    jnp.asarray(n_valid, jnp.int32)]).reshape(1, 2)
+
+    best, j = pl.pallas_call(
+        _swap_select_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 2), lambda r: (0, 0)),              # i, n_valid
+            pl.BlockSpec((block_rows, np_), lambda r: (r, 0)),   # M rows
+            pl.BlockSpec((block_rows, np_), lambda r: (r, 0)),   # G rows
+            pl.BlockSpec((1, np_), lambda r: (0, 0)),            # Mi full
+            pl.BlockSpec((1, np_), lambda r: (0, 0)),            # Gi full
+            pl.BlockSpec((1, block_rows), lambda r: (0, r)),     # Mi block
+            pl.BlockSpec((1, block_rows), lambda r: (0, r)),     # Gi block
+            pl.BlockSpec((1, block_rows), lambda r: (0, r)),     # contrib
+            pl.BlockSpec((1, 1), lambda r: (0, 0)),              # contrib[i]
+        ],
+        out_specs=(pl.BlockSpec((1, 1), lambda r: (0, 0)),
+                   pl.BlockSpec((1, 1), lambda r: (0, 0))),
+        out_shape=(jax.ShapeDtypeStruct((1, 1), M.dtype),
+                   jax.ShapeDtypeStruct((1, 1), jnp.int32)),
+        interpret=interpret,
+    )(iv, M, G, Mi, Gi, Mi, Gi,
+      contrib.reshape(1, np_), ci.reshape(1, 1))
+    return best[0, 0], j[0, 0]

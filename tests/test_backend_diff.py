@@ -85,6 +85,38 @@ def test_refine_identical(host_name, topo, faulty):
     assert np.array_equal(single, ref[0])
 
 
+@pytest.mark.parametrize("health", ["healthy", "faults", "stragglers", "both"])
+def test_fattree_lazy_refine_identical(health):
+    """Fat-tree implicit path: the jitted refine computes the endpoint-form
+    fat-tree metric in-kernel (coords + penalty gather, never a stored
+    matrix) for *every* health state, and stays bit-identical to the NumPy
+    kernels running against the lazy adapter's ``__getitem__``."""
+    from repro.core import mapping_jax
+
+    topo = FatTreeTopology(8)
+    p_f = strag = None
+    if health in ("faults", "both"):
+        p_f = np.zeros(topo.n_nodes)
+        bad = np.random.default_rng(5).choice(topo.n_nodes, 6, replace=False)
+        p_f[bad] = 0.1
+    if health in ("stragglers", "both"):
+        strag = np.zeros(topo.n_nodes)
+        slow = np.random.default_rng(9).choice(topo.n_nodes, 5, replace=False)
+        strag[slow] = 1.5
+    Dl = topo.lazy_distance(p_f, c=2.0, straggler=strag)
+    assert mapping_jax.lazy_supported(Dl), health
+    wl = npb_dt_like(40)
+    rng = np.random.default_rng(1)
+    P = np.stack([rng.permutation(topo.n_nodes)[:40] for _ in range(3)])
+    ref = mapping.refine_batch(wl.comm.G_v, Dl, P)
+    hb_ref = mapping.hop_bytes_batch(wl.comm.G_v, Dl, ref)
+    with backend.use("jax"):
+        out = mapping.refine_batch(wl.comm.G_v, Dl, P)
+        hb = mapping.hop_bytes_batch(wl.comm.G_v, Dl, out)
+    assert np.array_equal(out, ref), health
+    np.testing.assert_allclose(hb, hb_ref, rtol=RTOL)
+
+
 @pytest.mark.parametrize("host_name,topo", _hosts())
 def test_select_nodes_identical(host_name, topo):
     W = _weights(topo, faulty=True)

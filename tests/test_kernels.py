@@ -208,6 +208,77 @@ def test_swap_gain_kernel_matches_ref(n, block_rows, dtype):
                                    rtol=tol, atol=tol * float(n))
 
 
+def _select_oracle(M, G, contrib, i, n_valid):
+    """Composed oracle for the fused select: full gains row, mask, argmax,
+    accept-or-identity — the exact steps the fused kernel collapses."""
+    from repro.kernels.swap_gain.ref import GAIN_EPS, swap_gain_ref
+
+    g = np.asarray(swap_gain_ref(jnp.asarray(M), jnp.asarray(G),
+                                 jnp.asarray(contrib), i)).copy()
+    g[i] = 0.0
+    g[n_valid:] = -np.inf
+    j = int(np.argmax(g))
+    gain = float(g[j])
+    if not (gain > GAIN_EPS and i < n_valid):
+        j = i
+    return gain, j
+
+
+@pytest.mark.parametrize("n,n_valid,block_rows", [
+    (16, 16, 8),        # single block
+    (64, 64, 64),       # block == n
+    (200, 180, 64),     # ragged + padded tail beyond n_valid
+    (300, 256, 128),    # multi-block with padding
+])
+def test_swap_select_triad(n, n_valid, block_rows):
+    """Fused mover select: ref == Pallas-interpret == composed oracle,
+    including first-occurrence argmax ties (integer weights make exact
+    duplicate gains common at these sizes)."""
+    from repro.kernels.swap_gain.kernel import swap_select_tpu
+    from repro.kernels.swap_gain.ref import swap_select_ref
+
+    rng = np.random.default_rng(0)
+    A = rng.integers(0, 7, (n, n)).astype(np.float64)
+    M = A + A.T
+    B = (rng.integers(0, 5, (n, n)) * (rng.random((n, n)) < 0.3))
+    G = (B + B.T).astype(np.float64)
+    contrib = (G * M).sum(1)
+    for i in (0, n // 3, n_valid - 1, n - 1):
+        want_gain, want_j = _select_oracle(M, G, contrib, i, n_valid)
+        for fn in (
+            swap_select_ref,
+            lambda *a: swap_select_tpu(*a, block_rows=block_rows,
+                                       interpret=True),
+        ):
+            gain, j = fn(jnp.asarray(M), jnp.asarray(G),
+                         jnp.asarray(contrib), jnp.int32(i),
+                         jnp.int32(n_valid))
+            assert int(j) == want_j, (n, i)
+            if want_j != i:            # gain only meaningful on accept
+                np.testing.assert_allclose(float(gain), want_gain,
+                                           rtol=1e-12)
+
+
+def test_swap_select_rejects_all_negative():
+    """No positive gain anywhere -> j == i (identity swap), every impl."""
+    from repro.kernels.swap_gain.kernel import swap_select_tpu
+    from repro.kernels.swap_gain.ops import swap_select
+    from repro.kernels.swap_gain.ref import swap_select_ref
+
+    n = 32
+    # an already-optimal layout: identical processes, so every swap gain
+    # is exactly zero (< GAIN_EPS) and the mover must stay put
+    M = np.ones((n, n)) - np.eye(n)
+    G = np.ones((n, n)) - np.eye(n)
+    contrib = (G * M).sum(1)
+    args = (jnp.asarray(M), jnp.asarray(G), jnp.asarray(contrib),
+            jnp.int32(3), jnp.int32(n))
+    for fn in (swap_select_ref, swap_select,
+               lambda *a: swap_select_tpu(*a, interpret=True)):
+        _, j = fn(*args)
+        assert int(j) == 3
+
+
 def test_swap_gain_ops_dispatch():
     """auto resolves to the jitted ref off-TPU; the dense refine path of
     the jax mapping backend consumes exactly this entry point."""
@@ -267,6 +338,56 @@ def test_torus_hop_elems_matches_dense_hop_matrix():
     got = np.asarray(torus_hop_elems_ref(
         jnp.asarray(c[u.ravel()]), jnp.asarray(c[v.ravel()]), topo.dims))
     np.testing.assert_array_equal(got.reshape(120, 120), H)
+
+
+@pytest.mark.parametrize("k,m,kk", [
+    (4, 16, 16),       # tiny pod structure
+    (6, 37, 53),       # ragged (padding exercised)
+    (8, 128, 100),     # block-aligned rows, ragged cols
+])
+def test_fattree_hop_triad(k, m, kk):
+    """np == jitted ref == Pallas-interpret on the fat-tree metric, all
+    checked against the topology's dense hop matrix."""
+    from repro.core.fattree import FatTreeTopology
+    from repro.kernels.hop_dist.kernel import fattree_hop_tpu
+    from repro.kernels.hop_dist.ops import (fattree_hop, fattree_hop_pairs_np)
+    from repro.kernels.hop_dist.ref import fattree_hop_pairs_ref
+
+    topo = FatTreeTopology(k)
+    c = topo.coords_array().astype(np.float64)
+    rng = np.random.default_rng(0)
+    u = rng.integers(0, topo.n_nodes, m)
+    v = rng.integers(0, topo.n_nodes, kk)
+    want = topo.hop_matrix()[np.ix_(u, v)].astype(np.float64)
+    np.testing.assert_array_equal(fattree_hop_pairs_np(c[u], c[v]), want)
+    np.testing.assert_array_equal(
+        np.asarray(fattree_hop_pairs_ref(jnp.asarray(c[u]),
+                                         jnp.asarray(c[v]))), want)
+    np.testing.assert_array_equal(
+        np.asarray(fattree_hop_tpu(jnp.asarray(c[u]), jnp.asarray(c[v]),
+                                   interpret=True)), want)
+    np.testing.assert_array_equal(np.asarray(fattree_hop(c[u], c[v])), want)
+
+
+def test_fattree_hop_elems_matches_lazy_adapter():
+    """The elementwise form agrees with FatTreeLazyDistance under scale
+    and endpoint penalties (the exact metric the jitted refine compiles)."""
+    from repro.core.fattree import FatTreeTopology
+    from repro.kernels.hop_dist.ops import fattree_hop_np
+    from repro.kernels.hop_dist.ref import fattree_hop_elems_ref
+
+    topo = FatTreeTopology(4)
+    lazy = topo.lazy_distance(c=2.0)
+    c = topo.coords_array()
+    n = topo.n_nodes
+    u, v = np.meshgrid(np.arange(n), np.arange(n), indexing="ij")
+    u, v = u.ravel(), v.ravel()
+    got_np = 2.0 * fattree_hop_np(c[u], c[v])
+    got_ref = 2.0 * np.asarray(fattree_hop_elems_ref(
+        jnp.asarray(c[u]), jnp.asarray(c[v])))
+    np.testing.assert_array_equal(got_np, 2.0 * topo.hop_matrix()[u, v])
+    np.testing.assert_array_equal(got_ref, got_np)
+    np.testing.assert_array_equal(np.asarray(lazy[u, v]), got_np)
 
 
 @given(st.integers(2, 16), st.integers(2, 16), st.integers(2, 16),
