@@ -14,7 +14,8 @@ import sys
 import time
 
 BENCHES = ("fig3", "table1", "fig4_5", "mapping_scale", "fault_ablation",
-           "refine_scale", "clustersim", "serve_storm", "roofline")
+           "refine_scale", "clustersim", "belief_sweep", "serve_storm",
+           "roofline")
 
 
 def main() -> int:

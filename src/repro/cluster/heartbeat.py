@@ -25,6 +25,19 @@ estimator.
 **Determinism.**  The monitor itself never draws randomness;
 ``simulate_rounds`` draws reply misses from the explicit ``rng``
 argument, so a heartbeat history is reproducible from its seed.
+
+**Deprecation note.**  The :class:`OutageEstimator` hierarchy here
+(:class:`MovingAverage` / :class:`EWMA`) predates the belief subsystem
+in :mod:`repro.beliefs` and survives as the monitor's default
+post-processing only.  New estimation code should implement the
+:class:`repro.beliefs.BeliefModel` protocol — which is horizon-aware
+and learns from lifetime statistics rather than per-round miss
+fractions — and these legacy estimators are available behind it via
+:class:`repro.beliefs.HeartbeatBeliefAdapter` so the monitor and the
+:class:`repro.beliefs.BeliefTracker` share one interface.  No removal
+is scheduled (drain/degrade thresholds are calibrated against per-round
+miss fractions), but the hierarchy is frozen: grow ``repro.beliefs``
+instead.
 """
 from __future__ import annotations
 

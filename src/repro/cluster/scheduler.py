@@ -97,10 +97,11 @@ class Scheduler:
         drain_threshold: float = 0.5,
         undrain_threshold: float | None = None,
         degraded_threshold: float | None = None,
-        p_f_atol: float = 0.25,
+        p_f_atol: float = 0.15,
         seed: int = 0,
         engine: PlacementEngine | None = None,
         backfill: bool = True,
+        tracker=None,
     ):
         self.registry = NodeRegistry(topo)
         self.topo = topo
@@ -123,8 +124,23 @@ class Scheduler:
         # re-uses the current epoch instead of minting a new one.  Every
         # in-tree policy reads only the pattern, so sub-atol drift can
         # never change a placement — it only would have cold-started the
-        # engine caches on every heartbeat round.
+        # engine caches on every heartbeat round.  The 0.15 default is
+        # the tightest value at which epochs track genuine failures only
+        # under raw monitor jitter (full-mode serving loop: 44 epochs =
+        # churn + initial at 0.15/0.25, 47 at 0.1, 107 and an 0.893 hit
+        # rate at 0.05 — below the >=95% floor gated in BENCH_state;
+        # a learned BeliefTracker's exposure-only drift stays at the
+        # floor at every grid point, see benchmarks/belief_sweep.py
+        # --atol-sweep); configurable here and through the scenario
+        # presets' ``p_f_atol=`` kwarg.
         self.p_f_atol = p_f_atol
+        # optional BeliefTracker (repro.beliefs): when attached, the
+        # published ClusterState carries the tracker's learned hazard
+        # belief instead of the raw heartbeat estimate, and failure /
+        # repair events are forwarded so the belief updates online.
+        # Drain/degrade decisions stay monitor-driven either way — the
+        # tracker only changes what Eq. 1 placements believe.
+        self.tracker = tracker
         self.backfill = backfill
         self.rng = np.random.default_rng(seed)
         self.engine = engine or PlacementEngine()
@@ -155,9 +171,15 @@ class Scheduler:
         epoch is minted only when either actually changed (see
         ``p_f_atol``), so callers can use ``state.key`` — and the engine
         does — as a cache token that is stable across no-op heartbeat
-        rounds."""
+        rounds.  With a belief tracker attached the belief is the
+        tracker's learned ``p_f`` (queried at the scheduler clock so
+        censored exposure stays current); otherwise the raw heartbeat
+        estimate."""
         codes = self.registry.health_codes()
-        p = self.monitor.outage_probabilities()
+        if self.tracker is not None:
+            p = self.tracker.p_f_vector(now=self.clock)
+        else:
+            p = self.monitor.outage_probabilities()
         # a non-allocatable node's belief is pinned to 1.0 in every view
         # placements consume, so its raw estimate drifting (a dead node's
         # miss fraction climbing toward 1.0) must not mint epochs
@@ -177,6 +199,8 @@ class Scheduler:
         ``heartbeat_interval``; the default 1.0 reads as one abstract
         round for direct callers)."""
         self.monitor.poll(replies, latencies, dt=dt)
+        if self.tracker is not None:
+            self.tracker.observe_heartbeat(self.clock)
         p = self.monitor.outage_probabilities()
         deg = self.degraded_threshold
         freed = False
@@ -343,6 +367,8 @@ class Scheduler:
         requeued job released capacity another pending job fits in, call
         :meth:`schedule_pending` afterwards (the event simulator does)."""
         node_ids = [int(x) for x in np.atleast_1d(node_ids)]
+        if self.tracker is not None:
+            self.tracker.observe_failure(node_ids, self.clock)
         self.registry.mark(node_ids, NodeState.DOWN)
         affected = []
         requeued: list[Job] = []
@@ -393,6 +419,9 @@ class Scheduler:
         :meth:`heartbeat_round` keeps gating its return to placements.
         With the degraded band enabled, an estimate in [degraded, drain)
         brings the node back DEGRADED."""
+        if self.tracker is not None:
+            self.tracker.observe_repair(
+                [int(x) for x in np.atleast_1d(node_ids)], self.clock)
         p = self.monitor.outage_probabilities()
         deg = self.degraded_threshold
         for i in (int(x) for x in np.atleast_1d(node_ids)):

@@ -60,16 +60,76 @@ WALL_CLOCK_KEYS = ("place_time_s",)
 
 
 # ------------------------------------------------------------------ stats
-def bootstrap_ci(samples, B: int = 2000, alpha: float = 0.05,
-                 seed: int = 0,
-                 stat: Callable = np.mean) -> tuple[float, float]:
-    """Percentile-bootstrap confidence interval of ``stat(samples)``.
+def _norm_ppf(p: float) -> float:
+    """Standard-normal quantile (Acklam's rational approximation,
+    |relative error| < 1.15e-9 — scipy-free)."""
+    if not (0.0 < p < 1.0):
+        raise ValueError(f"p must be in (0, 1), got {p}")
+    a = (-3.969683028665376e+01, 2.209460984245205e+02,
+         -2.759285104469687e+02, 1.383577518672690e+02,
+         -3.066479806614716e+01, 2.506628277459239e+00)
+    b = (-5.447609879822406e+01, 1.615858368580409e+02,
+         -1.556989798598866e+02, 6.680131188771972e+01,
+         -1.328068155288572e+01)
+    c = (-7.784894002430293e-03, -3.223964580411365e-01,
+         -2.400758277161838e+00, -2.549732539343734e+00,
+         4.374664141464968e+00, 2.938163982698783e+00)
+    d = (7.784695709041462e-03, 3.224671290700398e-01,
+         2.445134137142996e+00, 3.754408661907416e+00)
+    p_low = 0.02425
+    if p < p_low:
+        q = math.sqrt(-2.0 * math.log(p))
+        return ((((((c[0] * q + c[1]) * q + c[2]) * q + c[3]) * q + c[4])
+                 * q + c[5])
+                / ((((d[0] * q + d[1]) * q + d[2]) * q + d[3]) * q + 1.0))
+    if p > 1.0 - p_low:
+        q = math.sqrt(-2.0 * math.log(1.0 - p))
+        return -((((((c[0] * q + c[1]) * q + c[2]) * q + c[3]) * q + c[4])
+                  * q + c[5])
+                 / ((((d[0] * q + d[1]) * q + d[2]) * q + d[3]) * q + 1.0))
+    q = p - 0.5
+    r = q * q
+    return ((((((a[0] * r + a[1]) * r + a[2]) * r + a[3]) * r + a[4])
+             * r + a[5]) * q
+            / (((((b[0] * r + b[1]) * r + b[2]) * r + b[3]) * r + b[4])
+               * r + 1.0))
 
-    Resamples ``samples`` with replacement ``B`` times, applies ``stat``
-    along the resample axis (``stat(x, axis=1)``), and returns the
-    ``(alpha/2, 1 - alpha/2)`` quantiles of the bootstrap distribution.
-    Degenerate inputs short-circuit: a single observation or an all-equal
-    sample has a zero-width interval at the observed value.
+
+def _norm_cdf(z: float) -> float:
+    """Standard-normal CDF via ``math.erf``."""
+    return 0.5 * (1.0 + math.erf(z / math.sqrt(2.0)))
+
+
+def _jackknife(x: np.ndarray, stat: Callable) -> np.ndarray:
+    """Leave-one-out statistic values (vectorized for the mean — the
+    replica engine's default — generic np.delete loop otherwise)."""
+    n = x.size
+    if stat is np.mean:
+        return (x.sum() - x) / (n - 1)
+    return np.array([float(stat(np.delete(x, i), axis=0))
+                     for i in range(n)])
+
+
+def bootstrap_ci(samples, B: int = 2000, alpha: float = 0.05,
+                 seed: int = 0, stat: Callable = np.mean,
+                 method: str = "percentile") -> tuple[float, float]:
+    """Bootstrap confidence interval of ``stat(samples)``.
+
+    Resamples ``samples`` with replacement ``B`` times and applies
+    ``stat`` along the resample axis (``stat(x, axis=1)``).
+    ``method="percentile"`` (default) returns the ``(alpha/2,
+    1 - alpha/2)`` quantiles of the bootstrap distribution;
+    ``method="bca"`` returns the bias-corrected-and-accelerated (BCa)
+    interval — the same bootstrap sample read at quantile levels
+    adjusted by the median-bias correction ``z0`` (normal quantile of
+    the fraction of bootstrap values below the observed statistic) and
+    the jackknife acceleration ``a`` (skewness of the leave-one-out
+    statistics), which restores second-order-correct coverage on the
+    small, skewed paired-delta samples the percentile interval
+    under-covers (see the coverage test in ``tests/test_beliefs.py``).
+    Degenerate inputs short-circuit for both methods: a single
+    observation or an all-equal sample has a zero-width interval at the
+    observed value.
     """
     x = np.asarray(samples, dtype=np.float64)
     if x.ndim != 1:
@@ -81,13 +141,34 @@ def bootstrap_ci(samples, B: int = 2000, alpha: float = 0.05,
         raise ValueError(f"alpha must be in (0, 1), got {alpha}")
     if B < 1:
         raise ValueError(f"B must be >= 1, got {B}")
+    if method not in ("percentile", "bca"):
+        raise ValueError(f"unknown bootstrap method {method!r}; "
+                         "use 'percentile' or 'bca'")
     if n == 1 or np.ptp(x) == 0.0:
         v = float(stat(x, axis=0))
         return (v, v)
     rng = np.random.default_rng(seed)
     idx = rng.integers(0, n, size=(B, n))
     boot = np.asarray(stat(x[idx], axis=1), dtype=np.float64)
-    lo, hi = np.quantile(boot, [alpha / 2.0, 1.0 - alpha / 2.0])
+    if method == "percentile":
+        lo, hi = np.quantile(boot, [alpha / 2.0, 1.0 - alpha / 2.0])
+        return (float(lo), float(hi))
+    # BCa: bias correction from the bootstrap distribution's position
+    # relative to the observed statistic, acceleration from the
+    # jackknife skewness
+    theta = float(stat(x, axis=0))
+    frac_below = float((boot < theta).mean())
+    frac_below = min(max(frac_below, 1.0 / (B + 1)), B / (B + 1.0))
+    z0 = _norm_ppf(frac_below)
+    jack = _jackknife(x, stat)
+    dev = jack.mean() - jack
+    denom = 6.0 * (dev ** 2).sum() ** 1.5
+    accel = float((dev ** 3).sum() / denom) if denom > 0 else 0.0
+    levels = []
+    for z_a in (_norm_ppf(alpha / 2.0), _norm_ppf(1.0 - alpha / 2.0)):
+        adj = z0 + (z0 + z_a) / (1.0 - accel * (z0 + z_a))
+        levels.append(min(max(_norm_cdf(adj), 0.0), 1.0))
+    lo, hi = np.quantile(boot, levels)
     return (float(lo), float(hi))
 
 
@@ -99,25 +180,28 @@ class SummaryStats:
     n: int
     mean: float
     std: float                  # sample std (ddof=1; 0.0 when n == 1)
-    ci_low: float               # percentile-bootstrap CI of the mean
+    ci_low: float               # bootstrap CI of the mean (see ``method``)
     ci_high: float
     p05: float
     p50: float
     p95: float
+    method: str = "percentile"  # bootstrap CI flavor: percentile | bca
 
 
 def summarize(samples, metric: str = "", B: int = 2000,
-              alpha: float = 0.05, seed: int = 0) -> SummaryStats:
+              alpha: float = 0.05, seed: int = 0,
+              method: str = "percentile") -> SummaryStats:
     """One metric vector -> :class:`SummaryStats` (bootstrap CI of the
-    mean plus sample quantiles)."""
+    mean plus sample quantiles).  ``method="bca"`` opts into the
+    bias-corrected-and-accelerated interval."""
     x = np.asarray(samples, dtype=np.float64)
-    lo, hi = bootstrap_ci(x, B=B, alpha=alpha, seed=seed)
+    lo, hi = bootstrap_ci(x, B=B, alpha=alpha, seed=seed, method=method)
     q05, q50, q95 = np.quantile(x, [0.05, 0.50, 0.95])
     return SummaryStats(
         metric=metric, n=int(x.size), mean=float(x.mean()),
         std=float(x.std(ddof=1)) if x.size > 1 else 0.0,
         ci_low=lo, ci_high=hi,
-        p05=float(q05), p50=float(q50), p95=float(q95))
+        p05=float(q05), p50=float(q50), p95=float(q95), method=method)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -143,6 +227,7 @@ class PairedComparison:
     delta_ci_high: float
     win_rate: float
     p_value: float
+    method: str = "percentile"  # bootstrap CI flavor: percentile | bca
 
     @property
     def significant(self) -> bool:
@@ -152,8 +237,13 @@ class PairedComparison:
 
 def paired_compare(a_samples, b_samples, *, metric: str = "",
                    a: str = "a", b: str = "b", B: int = 2000,
-                   alpha: float = 0.05, seed: int = 0) -> PairedComparison:
-    """Paired bootstrap comparison: is ``mean(a) < mean(b)`` (same seeds)?"""
+                   alpha: float = 0.05, seed: int = 0,
+                   method: str = "percentile") -> PairedComparison:
+    """Paired bootstrap comparison: is ``mean(a) < mean(b)`` (same seeds)?
+
+    ``method="bca"`` applies the BCa correction to the delta CI — small
+    paired-delta samples are exactly where the percentile interval's
+    coverage gets shaky (skewed deltas pull its endpoints inward)."""
     xa = np.asarray(a_samples, dtype=np.float64)
     xb = np.asarray(b_samples, dtype=np.float64)
     if xa.shape != xb.shape or xa.ndim != 1:
@@ -161,7 +251,7 @@ def paired_compare(a_samples, b_samples, *, metric: str = "",
             f"paired samples need matching 1-D shapes, got {xa.shape} vs "
             f"{xb.shape}")
     delta = xb - xa
-    lo, hi = bootstrap_ci(delta, B=B, alpha=alpha, seed=seed)
+    lo, hi = bootstrap_ci(delta, B=B, alpha=alpha, seed=seed, method=method)
     # one-sided p-value: bootstrap mass at or below zero
     if delta.size == 1 or np.ptp(delta) == 0.0:
         k = B if float(delta.mean()) <= 0.0 else 0
@@ -174,7 +264,7 @@ def paired_compare(a_samples, b_samples, *, metric: str = "",
         mean_a=float(xa.mean()), mean_b=float(xb.mean()),
         delta=float(delta.mean()), delta_ci_low=lo, delta_ci_high=hi,
         win_rate=float((xa < xb).mean()),
-        p_value=(k + 1) / (B + 1))
+        p_value=(k + 1) / (B + 1), method=method)
 
 
 # ------------------------------------------------------- replica execution
@@ -242,18 +332,20 @@ class ReplicaSet:
                 f"{sorted(next(iter(self.metrics.values())))}") from None
 
     def summary(self, policy: str, metric: str = "mean_completion",
-                B: int = 2000, alpha: float = 0.05,
-                seed: int = 0) -> SummaryStats:
+                B: int = 2000, alpha: float = 0.05, seed: int = 0,
+                method: str = "percentile") -> SummaryStats:
         return summarize(self.samples(policy, metric), metric=metric,
-                         B=B, alpha=alpha, seed=seed)
+                         B=B, alpha=alpha, seed=seed, method=method)
 
     def compare(self, a: str = "tofa", b: str = "linear",
                 metric: str = "mean_completion", B: int = 2000,
-                alpha: float = 0.05, seed: int = 0) -> PairedComparison:
+                alpha: float = 0.05, seed: int = 0,
+                method: str = "percentile") -> PairedComparison:
         """Paired per-seed comparison (default: tofa vs. linear)."""
         return paired_compare(
             self.samples(a, metric), self.samples(b, metric),
-            metric=metric, a=a, b=b, B=B, alpha=alpha, seed=seed)
+            metric=metric, a=a, b=b, B=B, alpha=alpha, seed=seed,
+            method=method)
 
 
 class _StreamingCollector:

@@ -98,6 +98,78 @@ def _converged_monitor(sch: Scheduler, truth: np.ndarray, seed: int,
                                 truth, rounds)
 
 
+BELIEF_MODES = ("monitor", "oracle", "learned", "learned-node", "static",
+                "adversarial")
+
+
+def _attach_belief(sch: Scheduler, mode: str, proc, groups, seed: int, *,
+                   horizon: float = 1.0,
+                   train_horizon: Optional[float] = None,
+                   fast: bool = False) -> dict:
+    """Attach a belief tracker to ``sch`` per the preset's ``belief_mode``.
+
+    The belief-error axis of ``benchmarks/belief_sweep.py``:
+
+    * ``"monitor"`` (default) — no tracker; the scheduler keeps reading
+      the converged heartbeat estimate.  Bit-identical to the pre-belief
+      presets.
+    * ``"oracle"`` — the failure process's :meth:`expected_p_f` handed
+      straight to placement (zero belief error).
+    * ``"learned"`` — :class:`~repro.beliefs.RackPooledBayes` pre-trained
+      on a ``train_horizon``-long trace generated from a seed-derived
+      training RNG (disjoint from every sim stream), then updated online
+      from the live failure/repair events.  ``"learned-node"`` is the
+      un-pooled :class:`~repro.beliefs.ExponentialBayes` ablation.
+    * ``"static"`` — a uniform positive prior (mean of the truth's
+      nonzero entries): under the Eq. 1 ``p_f > 0`` pattern this
+      penalizes every route equally, i.e. fault-*blind* placement — the
+      baseline a learned belief must beat.
+    * ``"adversarial"`` — the truth vector reversed in id order: belief
+      mass on healthy nodes, none on the flaky set.
+
+    Drain/degrade decisions stay monitor-driven in every mode, so the
+    only thing that varies across modes is the belief Eq. 1 consumes.
+    Returns belief-quality scalars for the result row (empty for
+    ``"monitor"``).
+    """
+    if mode == "monitor":
+        return {}
+    from repro.beliefs import (AdversarialBeliefs, BeliefTracker,
+                               ExponentialBayes, OracleBeliefs,
+                               RackPooledBayes, StaticPrior, belief_mse,
+                               pattern_confusion)
+    n = sch.topo.n_nodes
+    truth = proc.expected_p_f(n)
+    if mode == "oracle":
+        model = OracleBeliefs(truth)
+    elif mode == "static":
+        pos = truth[truth > 0]
+        model = StaticPrior(float(pos.mean()) if pos.size else 0.1)
+    elif mode == "adversarial":
+        model = AdversarialBeliefs(truth)
+    elif mode == "learned":
+        model = RackPooledBayes([np.asarray(g) for g in groups])
+    elif mode == "learned-node":
+        model = ExponentialBayes()
+    else:
+        raise ValueError(f"unknown belief_mode {mode!r}; "
+                         f"have {BELIEF_MODES}")
+    tracker = BeliefTracker(n, model, horizon=horizon)
+    if mode in ("learned", "learned-node"):
+        if train_horizon is None:
+            train_horizon = 60.0 if fast else 240.0
+        rng_train = np.random.default_rng(seed * 9901 + 97)
+        tracker.ingest_events(proc.generate(rng_train, train_horizon),
+                              t_end=train_horizon)
+        tracker.rebase(0.0)
+    sch.tracker = tracker
+    p0 = tracker.p_f_vector(now=0.0)
+    pat = pattern_confusion(p0, truth)
+    return {"belief_err": belief_mse(p0, truth),
+            "belief_pattern_precision": pat["precision"],
+            "belief_pattern_recall": pat["recall"]}
+
+
 # ---------------------------------------------------------------- presets
 @register_preset(
     "paper-fig4-5",
@@ -277,14 +349,23 @@ def fat_tree(policies: Sequence[str] = ("linear", "tofa"),
     "and actually go down mid-run; restarts charge from the last "
     "checkpoint and engine.replace moves the displaced processes.")
 def correlated_failures(policies: Sequence[str] = ("linear", "tofa"),
-                        seed: int = 0, fast: bool = False) -> dict:
+                        seed: int = 0, fast: bool = False,
+                        belief_mode: str = "monitor",
+                        p_f_atol: Optional[float] = None,
+                        train_horizon: Optional[float] = None,
+                        checkpointing: bool = True,
+                        engine: Optional[PlacementEngine] = None) -> dict:
     # full scale stays at a 216-node torus: every distinct failed set
     # costs one Eq. 1 weight-matrix derivation (route enumeration, ~1 s
     # at 6x6x6 vs ~5 s at 8x8x8), and a time-based run visits many
     dims = (4, 4, 4) if fast else (6, 6, 6)
     topo = TorusTopology(dims)
     net = network_for(topo)
-    engine = PlacementEngine()
+    # ``engine`` lets instrumentation (the belief-sweep churn row) read
+    # the cache counters; ``belief_mode`` selects the p_f source the
+    # placements consume (see _attach_belief) and ``p_f_atol`` overrides
+    # the scheduler's interning tolerance (None keeps its default)
+    engine = engine if engine is not None else PlacementEngine()
     rack_size = 16 if fast else 36
     racks = contiguous_racks(topo.n_nodes, rack_size)
     flaky_racks = racks[:1] if fast else racks[:2]
@@ -302,24 +383,30 @@ def correlated_failures(policies: Sequence[str] = ("linear", "tofa"),
     ])
     rows = {}
     for pol in policies:
+        sch_kw = {} if p_f_atol is None else {"p_f_atol": p_f_atol}
         sch = Scheduler(topo, net=net, engine=engine, seed=seed,
-                        drain_threshold=0.6)
+                        drain_threshold=0.6, **sch_kw)
         truth = np.zeros(topo.n_nodes)
         truth[flaky_ids] = 0.25          # flaky racks also miss heartbeats
         _converged_monitor(sch, truth, seed)
+        binfo = _attach_belief(sch, belief_mode, proc, racks, seed,
+                               train_horizon=train_horizon, fast=fast)
         sim = ClusterSim(
             sch, burst_stream(wls, policy=pol), failure_process=proc,
             config=SimConfig(heartbeat_interval=0.25,
-                             checkpoint_interval=0.05,
-                             checkpoint_overhead=0.002,
+                             checkpoint_interval=(0.05 if checkpointing
+                                                  else None),
+                             checkpoint_overhead=(0.002 if checkpointing
+                                                  else 0.0),
                              restart_delay=0.01,
                              failure_horizon=horizon),
             rng=np.random.default_rng(seed * 1213 + 29))
         rows[pol] = _row(sim.run())
+        rows[pol].update(binfo)
     return {"name": "correlated-failures",
             "params": {"dims": dims, "rack_size": rack_size,
                        "n_flaky_racks": len(flaky_racks), "n_jobs": n_jobs,
-                       "seed": seed},
+                       "belief_mode": belief_mode, "seed": seed},
             "policies": rows}
 
 
@@ -414,11 +501,16 @@ def dragonfly(policies: Sequence[str] = ("linear", "tofa"),
     "seeds, but the healthy-looking neighbours fail too.  Checkpointed "
     "restarts + engine.replace under correlated, spreading faults.")
 def cascading_racks(policies: Sequence[str] = ("linear", "tofa"),
-                    seed: int = 0, fast: bool = False) -> dict:
+                    seed: int = 0, fast: bool = False,
+                    belief_mode: str = "monitor",
+                    p_f_atol: Optional[float] = None,
+                    train_horizon: Optional[float] = None,
+                    checkpointing: bool = True,
+                    engine: Optional[PlacementEngine] = None) -> dict:
     dims = (4, 4, 4) if fast else (6, 6, 6)   # see correlated-failures
     topo = TorusTopology(dims)
     net = network_for(topo)
-    engine = PlacementEngine()
+    engine = engine if engine is not None else PlacementEngine()
     rack_size = 16 if fast else 27
     racks = contiguous_racks(topo.n_nodes, rack_size)
     seed_racks = (0, 1)                       # spontaneous-outage racks
@@ -432,23 +524,29 @@ def cascading_racks(policies: Sequence[str] = ("linear", "tofa"),
     truth = proc.expected_p_f(topo.n_nodes)
     rows = {}
     for pol in policies:
+        sch_kw = {} if p_f_atol is None else {"p_f_atol": p_f_atol}
         sch = Scheduler(topo, net=net, engine=engine, seed=seed,
-                        drain_threshold=0.6)
+                        drain_threshold=0.6, **sch_kw)
         _converged_monitor(sch, truth, seed)
+        binfo = _attach_belief(sch, belief_mode, proc, racks, seed,
+                               train_horizon=train_horizon, fast=fast)
         sim = ClusterSim(
             sch, burst_stream(wls, policy=pol, at=1.0),
             failure_process=proc,
             config=SimConfig(heartbeat_interval=0.25,
-                             checkpoint_interval=0.05,
-                             checkpoint_overhead=0.002,
+                             checkpoint_interval=(0.05 if checkpointing
+                                                  else None),
+                             checkpoint_overhead=(0.002 if checkpointing
+                                                  else 0.0),
                              restart_delay=0.01,
                              failure_horizon=500.0),
             rng=np.random.default_rng(seed * 1327 + 19))
         rows[pol] = _row(sim.run())
+        rows[pol].update(binfo)
     return {"name": "cascading-racks",
             "params": {"dims": dims, "rack_size": rack_size,
                        "seed_racks": list(seed_racks), "n_jobs": n_jobs,
-                       "seed": seed},
+                       "belief_mode": belief_mode, "seed": seed},
             "policies": rows}
 
 
@@ -459,11 +557,16 @@ def cascading_racks(policies: Sequence[str] = ("linear", "tofa"),
     "flaky nodes elsewhere keep dying.  Fault-aware placement must thread "
     "tight capacity around the elevated-p_f nodes until the rack returns.")
 def maintenance_burst(policies: Sequence[str] = ("linear", "tofa"),
-                      seed: int = 0, fast: bool = False) -> dict:
+                      seed: int = 0, fast: bool = False,
+                      belief_mode: str = "monitor",
+                      p_f_atol: Optional[float] = None,
+                      train_horizon: Optional[float] = None,
+                      checkpointing: bool = True,
+                      engine: Optional[PlacementEngine] = None) -> dict:
     dims = (4, 4, 4) if fast else (6, 6, 6)
     topo = TorusTopology(dims)
     net = network_for(topo)
-    engine = PlacementEngine()
+    engine = engine if engine is not None else PlacementEngine()
     rack_size = 16 if fast else 36
     racks = contiguous_racks(topo.n_nodes, rack_size)
     maintenance = racks[-1]
@@ -485,23 +588,30 @@ def maintenance_burst(policies: Sequence[str] = ("linear", "tofa"),
     truth[flaky] = 0.3
     rows = {}
     for pol in policies:
+        sch_kw = {} if p_f_atol is None else {"p_f_atol": p_f_atol}
         sch = Scheduler(topo, net=net, engine=engine, seed=seed,
-                        drain_threshold=0.6)
+                        drain_threshold=0.6, **sch_kw)
         _converged_monitor(sch, truth, seed)
+        binfo = _attach_belief(sch, belief_mode, proc, racks, seed,
+                               train_horizon=train_horizon, fast=fast)
         sim = ClusterSim(
             sch, burst_stream(wls, policy=pol, at=1.0),
             failure_process=proc,
             config=SimConfig(heartbeat_interval=0.1,
-                             checkpoint_interval=0.05,
-                             checkpoint_overhead=0.002,
+                             checkpoint_interval=(0.05 if checkpointing
+                                                  else None),
+                             checkpoint_overhead=(0.002 if checkpointing
+                                                  else 0.0),
                              restart_delay=0.01,
                              failure_horizon=500.0),
             rng=np.random.default_rng(seed * 2539 + 41))
         rows[pol] = _row(sim.run())
+        rows[pol].update(binfo)
     return {"name": "maintenance-burst",
             "params": {"dims": dims, "rack_size": rack_size,
                        "n_flaky": n_flaky, "n_jobs": n_jobs,
-                       "window": [0.5, 4.5], "seed": seed},
+                       "window": [0.5, 4.5], "belief_mode": belief_mode,
+                       "seed": seed},
             "policies": rows}
 
 
